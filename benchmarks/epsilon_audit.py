@@ -1,0 +1,68 @@
+"""Assumption A.3 audit: measure the ε-approximation of FedCore coresets on
+exact per-sample gradients, vs budget and vs a random-subset baseline —
+the empirical backbone of Theorem 5.1's O(ε) + O(1/R) bound."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coreset import build_coreset, coreset_epsilon
+from repro.core.gradients import grad_features, true_per_sample_grads
+from repro.data.synthetic import synthetic_dataset
+from repro.models.small import LogisticRegression
+
+
+def run(m: int = 200, budgets=(5, 10, 20, 50, 100), seed: int = 0):
+    clients = synthetic_dataset(0.5, 0.5, n_clients=1, mean_samples=m,
+                                std_samples=1, seed=seed)
+    data = {k: jnp.asarray(v[:m]) for k, v in clients[0].items()}
+    m = len(data["y"])
+    model = LogisticRegression()
+    params = model.init(jax.random.PRNGKey(seed))
+    # a few SGD steps so gradients are non-trivial
+    from repro.models.training import make_train_step
+    from repro.optim.optimizers import sgd
+    opt = sgd(0.1)
+    step = make_train_step(model.loss, opt, donate=False)
+    st = opt.init(params)
+    for _ in range(5):
+        params, st, _ = step(params, st, data)
+
+    feats = grad_features(model, params, data)
+    grads = jnp.asarray(true_per_sample_grads(model.loss, params, data))
+    rng = np.random.default_rng(seed)
+    rows = []
+    for b in budgets:
+        b = min(b, m)
+        cs = build_coreset(feats, b)
+        eps = float(coreset_epsilon(grads, cs))
+        # random-subset baseline (importance weight m/b)
+        rand = []
+        for _ in range(5):
+            idx = rng.choice(m, size=b, replace=False)
+            approx = np.asarray(grads[idx]).sum(0) * (m / b)
+            rand.append(np.linalg.norm(np.asarray(grads).sum(0) - approx) / m)
+        rows.append({"budget": b, "epsilon": eps,
+                     "epsilon_random": float(np.mean(rand)),
+                     "gain": float(np.mean(rand)) / max(eps, 1e-12)})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=200)
+    args = ap.parse_args(argv)
+    rows = run(args.m)
+    print(f"{'budget':>7s} {'eps(coreset)':>13s} {'eps(random)':>12s} "
+          f"{'gain':>6s}")
+    for r in rows:
+        print(f"{r['budget']:7d} {r['epsilon']:13.5f} "
+              f"{r['epsilon_random']:12.5f} {r['gain']:6.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

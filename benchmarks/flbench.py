@@ -1,0 +1,134 @@
+"""Shared FL-benchmark harness for the paper's evaluation (§6).
+
+Builds the three benchmark worlds (pseudo-MNIST / Shakespeare-like /
+Synthetic(α,β)) at a chosen scale, runs the four strategies under a
+straggler setting, and returns per-round histories + Table-2-style
+summaries.  ``scale`` controls cost:
+
+  tiny   — CI scale (runs in benchmarks.run on 1 CPU core)
+  small  — a few minutes per cell
+  paper  — the published client counts / rounds (Table 1 / Table 3)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.data.charlm import VOCAB, shakespeare_like_dataset
+from repro.data.mnist_like import mnist_like_dataset
+from repro.data.partition import train_test_split_clients
+from repro.data.synthetic import synthetic_dataset
+from repro.fed.server import FLConfig, run_federated, summarize
+from repro.fed.simulator import make_client_specs
+from repro.fed.strategies import (FedAvg, FedAvgDS, FedCore, FedProx,
+                                  LocalTrainer)
+from repro.models.small import CharLSTM, LogisticRegression, SmallCNN
+
+SCALES = {
+    # (n_clients, mean_samples, rounds, clients_per_round, epochs)
+    "tiny":  dict(frac_clients=0.02, rounds=6, k=5, epochs=5),
+    "small": dict(frac_clients=0.1, rounds=20, k=10, epochs=10),
+    "paper": dict(frac_clients=1.0, rounds=100, k=100, epochs=10),
+}
+
+# paper Table 1 / Table 3 constants
+BENCH_DEFS = {
+    "mnist": dict(n_clients=1000, mean=69, std=106, lr=0.03, rounds=100,
+                  k=100),
+    "shakespeare": dict(n_clients=143, mean=3616, std=6808, lr=0.03,
+                        rounds=30, k=10),
+    "synthetic_1_1": dict(n_clients=30, mean=670, std=1148, lr=0.001,
+                          rounds=100, k=10, alpha=1.0, beta=1.0),
+    "synthetic_0505": dict(n_clients=30, mean=670, std=1148, lr=0.001,
+                           rounds=100, k=10, alpha=0.5, beta=0.5),
+    "synthetic_0_0": dict(n_clients=30, mean=670, std=1148, lr=0.001,
+                          rounds=100, k=10, alpha=0.0, beta=0.0),
+}
+
+FEDPROX_MU = {"mnist": 0.1, "shakespeare": 0.001, "synthetic_1_1": 0.1,
+              "synthetic_0505": 0.1, "synthetic_0_0": 0.1}
+
+
+@dataclasses.dataclass
+class World:
+    name: str
+    model: object
+    train: list
+    test: dict
+    specs: list
+    cfg: FLConfig
+    prox_mu: float
+
+
+def build_world(bench: str, scale: str = "tiny", straggler_pct: float = 30.0,
+                seed: int = 0) -> World:
+    bd = BENCH_DEFS[bench]
+    sc = SCALES[scale]
+    n_clients = max(6, int(bd["n_clients"] * sc["frac_clients"]))
+    rng = np.random.default_rng(seed)
+
+    if bench == "mnist":
+        mean = bd["mean"] if scale == "paper" else max(30, bd["mean"] // 2)
+        clients = mnist_like_dataset(n_clients=n_clients, mean_samples=mean,
+                                     std_samples=bd["std"] / 2, seed=seed)
+        model = SmallCNN()
+        lr = bd["lr"]
+    elif bench == "shakespeare":
+        mean = bd["mean"] if scale == "paper" else 120
+        clients = shakespeare_like_dataset(
+            n_clients=n_clients, mean_samples=mean, std_samples=mean,
+            seq_len=80 if scale == "paper" else 24, seed=seed)
+        model = CharLSTM(vocab=VOCAB,
+                         d_hidden=128 if scale == "paper" else 48)
+        lr = bd["lr"]
+    else:
+        mean = bd["mean"] if scale == "paper" else 120
+        clients = synthetic_dataset(bd["alpha"], bd["beta"],
+                                    n_clients=n_clients, mean_samples=mean,
+                                    std_samples=mean, seed=seed)
+        model = LogisticRegression()
+        lr = 0.05 if scale != "paper" else bd["lr"]
+
+    train, test = train_test_split_clients(clients,
+                                           rng=np.random.default_rng(seed))
+    specs = make_client_specs([len(next(iter(d.values()))) for d in train],
+                              rng)
+    rounds = bd["rounds"] if scale == "paper" else sc["rounds"]
+    k = min(bd["k"] if scale == "paper" else sc["k"], n_clients)
+    cfg = FLConfig(rounds=rounds, clients_per_round=k,
+                   epochs=10 if scale == "paper" else sc["epochs"],
+                   batch_size=8, lr=lr, straggler_pct=straggler_pct,
+                   seed=seed, eval_every=max(1, rounds // 5))
+    # LSTM/CNN use x/y keys; LocalTrainer is model-agnostic
+    return World(bench, model, train, test, specs, cfg,
+                 FEDPROX_MU.get(bench, 0.1))
+
+
+STRATEGY_NAMES = ("fedavg", "fedavg_ds", "fedprox", "fedcore")
+
+
+def make_strategy(name: str, world: World):
+    if name == "fedprox":
+        trainer = LocalTrainer(world.model, world.cfg.lr,
+                               world.cfg.batch_size, prox_mu=world.prox_mu)
+        return FedProx(trainer)
+    trainer = LocalTrainer(world.model, world.cfg.lr, world.cfg.batch_size)
+    return {"fedavg": FedAvg, "fedavg_ds": FedAvgDS,
+            "fedcore": FedCore}[name](trainer)
+
+
+def run_benchmark(bench: str, scale: str = "tiny",
+                  straggler_pct: float = 30.0, seed: int = 0,
+                  strategies=STRATEGY_NAMES,
+                  verbose: bool = False) -> Dict[str, dict]:
+    world = build_world(bench, scale, straggler_pct, seed)
+    out = {}
+    for name in strategies:
+        strat = make_strategy(name, world)
+        res = run_federated(world.model, world.train, world.specs, strat,
+                            world.cfg, world.test, verbose=verbose)
+        res["summary"] = summarize(res["history"], res["deadline"])
+        out[name] = res
+    return out

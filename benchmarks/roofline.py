@@ -1,0 +1,371 @@
+"""Roofline analysis (deliverable g).
+
+Three terms per (arch x shape x mesh), TPU v5e targets:
+
+    compute    = FLOPs / (chips * 197e12 FLOP/s bf16)
+    memory     = HBM bytes / (chips * 819e9 B/s)
+    collective = collective bytes per chip / (50e9 B/s per ICI link)
+
+Sources:
+  * The dry-run JSONL (launch/dryrun.py) supplies compiled
+    memory_analysis, raw cost_analysis and HLO-parsed collective bytes.
+  * XLA's cost_analysis counts while-loop (lax.scan) bodies ONCE — the
+    layer stacks, SSD chunk scans and recurrent scans are undercounted by
+    their trip counts.  The roofline terms therefore come from the ANALYTIC
+    model below (explicit napkin math per family), cross-validated against
+    cost_analysis on small UNROLLED configs in tests/test_roofline.py; the
+    raw HLO numbers are carried alongside for transparency.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline --dryrun results/dryrun_single.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Any, Dict, Optional
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+# ---------------------------------------------------------------------------
+# hardware constants (TPU v5e)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+BYTES = 2                # bf16
+
+
+# ---------------------------------------------------------------------------
+# analytic cost model
+# ---------------------------------------------------------------------------
+
+def _attn_flops_fwd(cfg: ModelConfig, batch: int, s_q: int, s_kv: int,
+                    causal: bool = True) -> float:
+    """QK^T + PV for one layer (window-aware)."""
+    w = cfg.attention_window
+    eff = min(s_kv, w) if w else s_kv
+    if causal and not w and s_q == s_kv:
+        eff_avg = s_kv / 2
+    else:
+        eff_avg = eff
+    return 4.0 * batch * s_q * eff_avg * cfg.n_heads * cfg.d_head
+
+
+def _ffn_flops_fwd(cfg: ModelConfig, tokens: float) -> float:
+    d, f = cfg.d_model, cfg.d_ff
+    mults = 3 if cfg.act == "silu" else 2
+    if cfg.n_experts:
+        per_tok = cfg.moe_top_k * mults * d * f
+        if cfg.use_shared_expert:
+            per_tok += mults * d * f
+        per_tok += d * cfg.n_experts  # router
+        return 2.0 * tokens * per_tok
+    return 2.0 * tokens * mults * d * f
+
+
+def _attn_proj_flops_fwd(cfg: ModelConfig, tokens: float) -> float:
+    d, hq, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    return 2.0 * tokens * d * (hq * hd + 2 * hk * hd + hq * hd)
+
+
+def _mamba_flops_fwd(cfg: ModelConfig, tokens: float) -> float:
+    d, di, n, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj = 2.0 * tokens * d * (2 * di + 2 * n + nh) + 2.0 * tokens * di * d
+    conv = 2.0 * tokens * (di + 2 * n) * cfg.ssm_conv
+    # SSD: state update + output, linear in S
+    ssd = 2.0 * tokens * 2 * di * n
+    # intra-chunk quadratic term (chunk Q): ~2 * tokens * Q * (n + hd)
+    q = cfg.ssm_chunk
+    ssd += 2.0 * tokens * q * (n + cfg.ssm_headdim) / 2
+    return proj + conv + ssd
+
+
+def _xlstm_flops_fwd(cfg: ModelConfig, tokens: float) -> float:
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    # mLSTM: qkv/o-gate/out projections + matrix-memory update (C, n, Cq)
+    m = 2.0 * tokens * (5 * d * d) + 2.0 * tokens * cfg.n_heads * hd * hd * 3
+    # sLSTM: input proj (4 gates) + out proj + block-diag recurrent (4 gates)
+    s = 2.0 * tokens * (4 * d * d + d * d) + \
+        2.0 * tokens * cfg.n_heads * 4 * hd * hd
+    return (m + s) / 2  # alternating pattern
+
+
+def _unembed_flops_fwd(cfg: ModelConfig, tokens: float) -> float:
+    return 2.0 * tokens * cfg.d_model * cfg.vocab_size
+
+
+def forward_flops(cfg: ModelConfig, batch: int, seq: int,
+                  decode_cache: Optional[int] = None) -> float:
+    """Global forward FLOPs.  decode_cache!=None => one-token decode."""
+    if decode_cache is not None:
+        tokens = float(batch)
+        s_q, s_kv = 1, decode_cache
+        causal = False
+    else:
+        tokens = float(batch) * seq
+        s_q = s_kv = seq
+        causal = True
+
+    total = _unembed_flops_fwd(cfg, tokens)
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe", "vlm"):
+        total += L * (_attn_proj_flops_fwd(cfg, tokens)
+                      + _attn_flops_fwd(cfg, batch, s_q, s_kv, causal)
+                      + _ffn_flops_fwd(cfg, tokens))
+    elif cfg.family == "audio":
+        enc_tokens = tokens  # encoder seq comparable scale
+        total += cfg.enc_layers * (_attn_proj_flops_fwd(cfg, enc_tokens)
+                                   + _attn_flops_fwd(cfg, batch,
+                                                     s_q, s_kv, False)
+                                   + _ffn_flops_fwd(cfg, enc_tokens))
+        total += L * (2 * _attn_proj_flops_fwd(cfg, tokens)
+                      + 2 * _attn_flops_fwd(cfg, batch, s_q, s_kv, causal)
+                      + _ffn_flops_fwd(cfg, tokens))
+    elif cfg.family in ("ssm", "hybrid"):
+        total += L * _mamba_flops_fwd(cfg, tokens)
+        if cfg.family == "hybrid" and cfg.attn_every:
+            n_attn = L // cfg.attn_every
+            total += n_attn * (
+                _attn_proj_flops_fwd(cfg, tokens)
+                + _attn_flops_fwd(cfg, batch, s_q, s_kv, causal)
+                + _ffn_flops_fwd(cfg, tokens)
+                + 2.0 * tokens * 2 * cfg.d_model * cfg.d_model)  # concat proj
+    elif cfg.family == "xlstm":
+        total += L * _xlstm_flops_fwd(cfg, tokens)
+    return total
+
+
+def hbm_bytes(cfg: ModelConfig, shape: ShapeConfig, chips: int,
+              remat: bool = False, optimizer: str = "sgd") -> float:
+    """Global HBM traffic per step (read+write), bf16 params/activations."""
+    n_params = cfg.param_count()
+    tokens = shape.global_batch * shape.seq_len
+    d = cfg.d_model
+    L = cfg.n_layers + cfg.enc_layers
+    if shape.kind == "train":
+        # params read (fwd+bwd) + grad write + optimizer read/write
+        opt_mult = 6 if optimizer == "adam" else 4
+        p_traffic = opt_mult * n_params * BYTES
+        # activations: write fwd, read bwd, ~6 tensors of (tokens, d)/layer
+        act_per_layer = 6 * tokens * d * BYTES
+        if remat:
+            act_per_layer = 2 * tokens * d * BYTES  # only residual saved
+            p_traffic += 2 * n_params * BYTES       # recompute re-reads
+        return p_traffic + L * act_per_layer
+    if shape.kind == "prefill":
+        return n_params * BYTES + L * 4 * tokens * d * BYTES
+    # decode: weights once + cache read/write
+    active = cfg.active_param_count()
+    cache = decode_cache_bytes(cfg, shape)
+    return active * BYTES + cache
+
+
+def decode_cache_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    b, s = shape.global_batch, shape.seq_len
+    w = cfg.attention_window
+    s_eff = min(s, w) if w else s
+    total = 0.0
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        total += (cfg.n_layers * b * s_eff * cfg.n_kv_heads * cfg.d_head
+                  * 2 * BYTES)
+    if cfg.family in ("ssm", "hybrid"):
+        total += (cfg.n_layers * b * cfg.ssm_heads * cfg.ssm_headdim
+                  * cfg.ssm_state * BYTES)
+        if cfg.family == "hybrid" and cfg.attn_every:
+            total += (cfg.n_layers // cfg.attn_every) * b * s_eff \
+                * cfg.n_kv_heads * cfg.d_head * 2 * BYTES
+    if cfg.family == "xlstm":
+        hd = cfg.d_model // cfg.n_heads
+        total += cfg.n_layers * b * cfg.n_heads * (hd * hd + 2 * hd) * BYTES
+    return total
+
+
+def collective_bytes_per_chip(cfg: ModelConfig, shape: ShapeConfig,
+                              mesh_shape: Dict[str, int],
+                              sharding: str = "tp",
+                              grad_bytes: float = BYTES
+                              ) -> Dict[str, float]:
+    """Analytic per-chip collective traffic per step (ring terms).
+
+    TP (Megatron-style): 2 activation all-reduces per layer fwd (+2 bwd for
+    train), each moving 2*(k-1)/k * local bytes per chip.
+    DP (train): gradient all-reduce of the params, 2*(dp-1)/dp * params/chip.
+    MoE: all-to-all dispatch+combine of local tokens.
+    Multi-pod: the DP term factorizes hierarchically; the pod axis share is
+    reported as `dcn_bytes` (crosses the slower inter-pod links).
+    """
+    k = mesh_shape.get("model", 1)
+    dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    chips = k * dp
+    tokens_local = shape.global_batch * (
+        1 if shape.kind == "decode" else shape.seq_len) / dp
+    d = cfg.d_model
+    L = cfg.n_layers + cfg.enc_layers
+    ring = lambda n: 2 * (n - 1) / n if n > 1 else 0.0
+
+    # all-reduces per layer per direction (Megatron column->row pairs):
+    # attention (1) + mlp (1) = 2 for transformer layers; mamba2's
+    # in_proj->out_proj pair = 1 (sharding.py TP-shards w_in/w_out);
+    # the zamba2 shared attention block adds 2 per invocation.
+    if cfg.family in ("ssm", "hybrid"):
+        n_ar_per_layer = 1
+    else:
+        n_ar_per_layer = 2
+    L_attn = (cfg.n_layers // cfg.attn_every
+              if cfg.family == "hybrid" and cfg.attn_every else 0)
+    fwd_bwd = 2 if shape.kind == "train" else 1
+
+    tp_bytes = (n_ar_per_layer * L + 2 * L_attn) * fwd_bwd * \
+        tokens_local * d * BYTES * ring(k)
+
+    dp_bytes = 0.0
+    dcn_bytes = 0.0
+    if shape.kind == "train":
+        sharded_fraction = 1.0 / k  # TP-sharded params all-reduce over dp
+        # grad_bytes < BYTES models gradient compression (H2 iter 3: fp8=1)
+        grad_local = cfg.param_count() * grad_bytes * sharded_fraction
+        dp_bytes = grad_local * ring(dp)
+        if mesh_shape.get("pod", 1) > 1:
+            dcn_bytes = grad_local * ring(mesh_shape["pod"])
+
+    a2a_bytes = 0.0
+    if cfg.n_experts:
+        # dispatch + combine, each ~local tokens * d, all-to-all ~ (k-1)/k
+        a2a_bytes = 2 * fwd_bwd * tokens_local * d * BYTES * (k - 1) / k
+
+    return {"tp": tp_bytes, "dp": dp_bytes, "a2a": a2a_bytes,
+            "dcn": dcn_bytes,
+            "total": tp_bytes + dp_bytes + a2a_bytes}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # one token
+
+
+def roofline(arch_id: str, shape_name: str, mesh_shape: Dict[str, int],
+             sharding: str = "tp", remat: bool = False,
+             optimizer: str = "sgd",
+             dryrun_record: Optional[Dict[str, Any]] = None
+             ) -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch_id, shape=shape)
+    chips = 1
+    for v in mesh_shape.values():
+        chips *= v
+
+    if shape.kind == "train":
+        flops = 3.0 * forward_flops(cfg, shape.global_batch, shape.seq_len)
+    elif shape.kind == "prefill":
+        flops = forward_flops(cfg, shape.global_batch, shape.seq_len)
+    else:
+        flops = forward_flops(cfg, shape.global_batch, shape.seq_len,
+                              decode_cache=shape.seq_len)
+
+    hbm = hbm_bytes(cfg, shape, chips, remat=remat, optimizer=optimizer)
+    coll = collective_bytes_per_chip(cfg, shape, mesh_shape, sharding)
+
+    t_compute = flops / (chips * PEAK_FLOPS)
+    t_memory = hbm / (chips * HBM_BW)
+    t_coll = coll["total"] / ICI_BW
+
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    rec = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "x".join(str(v) for v in mesh_shape.values()),
+        "chips": chips,
+        "flops": flops, "hbm_bytes": hbm,
+        "collective_bytes_per_chip": coll,
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "useful_flops_ratio": mf / flops if flops else float("nan"),
+        "step_time_lower_bound_s": max(terms.values()),
+        "mfu_upper_bound": mf / (max(terms.values()) * chips * PEAK_FLOPS)
+        if max(terms.values()) > 0 else float("nan"),
+    }
+    if dryrun_record:
+        rec["hlo_flops_raw"] = dryrun_record.get("cost", {}).get("flops")
+        rec["hlo_collective_bytes_raw"] = dryrun_record.get(
+            "collectives", {}).get("total_bytes")
+        rec["bytes_per_device_compiled"] = dryrun_record.get(
+            "memory", {}).get("bytes_per_device")
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+def _fmt_t(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x*1e3:7.2f}ms"
+    return f"{x*1e6:7.2f}us"
+
+
+def build_table(dryrun_path: Optional[str] = None,
+                mesh_shape: Optional[Dict[str, int]] = None) -> str:
+    mesh_shape = mesh_shape or {"data": 16, "model": 16}
+    dr = {}
+    if dryrun_path:
+        with open(dryrun_path) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("ok"):
+                    dr[(r["arch"], r["shape"])] = r
+    rows = []
+    header = (f"{'arch':28s} {'shape':12s} {'compute':9s} {'memory':9s} "
+              f"{'coll':9s} {'dominant':10s} {'useful%':8s} {'mem/dev':9s}")
+    rows.append(header)
+    rows.append("-" * len(header))
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            rec = roofline(arch, shape, mesh_shape,
+                           dryrun_record=dr.get((arch, shape)))
+            mem_dev = rec.get("bytes_per_device_compiled")
+            mem_str = (f"{mem_dev/2**30:7.1f}Gi" if mem_dev else "      - ")
+            rows.append(
+                f"{arch:28s} {shape:12s} {_fmt_t(rec['compute_s'])} "
+                f"{_fmt_t(rec['memory_s'])} {_fmt_t(rec['collective_s'])} "
+                f"{rec['dominant']:10s} "
+                f"{100*rec['useful_flops_ratio']:7.1f}% {mem_str}")
+    return "\n".join(rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default=None,
+                    help="dry-run JSONL to join against")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=None, help="write records as JSONL")
+    args = ap.parse_args(argv)
+    mesh_shape = ({"pod": 2, "data": 16, "model": 16} if args.multi_pod
+                  else {"data": 16, "model": 16})
+    print(build_table(args.dryrun, mesh_shape))
+    if args.json:
+        with open(args.json, "w") as f:
+            for arch in ARCH_IDS:
+                for shape in SHAPES:
+                    f.write(json.dumps(roofline(arch, shape, mesh_shape))
+                            + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

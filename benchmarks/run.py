@@ -1,0 +1,91 @@
+"""Benchmark driver: one entry per paper table/figure + the roofline report.
+
+Prints ``name,us_per_call,derived`` CSV lines per the harness contract,
+followed by the human-readable tables.  Scale defaults to `tiny` so the
+whole suite completes on the single CPU core of this container; pass
+``--scale paper`` on real hardware for the published settings.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def _timed(name, fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    dt = time.perf_counter() - t0
+    return name, dt, out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="tiny",
+                    choices=["tiny", "small", "paper"])
+    ap.add_argument("--skip-fl", action="store_true",
+                    help="only run the cheap benchmarks")
+    ap.add_argument("--dryrun-jsonl", default="results/dryrun_single.jsonl")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (convergence_rate, coreset_overhead,
+                            epsilon_audit, fig3_convergence,
+                            fig4_round_distribution, fig5_epoch_tradeoff,
+                            perf_h3_projection, roofline, speedup_sim,
+                            table2_accuracy_time)
+
+    results = []
+    print("=" * 72)
+    print("## speedup_sim (paper-scale timing model; the '8x' headline)")
+    results.append(_timed("speedup_sim", speedup_sim.main, []))
+    print("=" * 72)
+    print("## coreset_overhead (paper §4.2 '<1 s' claim)")
+    results.append(_timed("coreset_overhead", coreset_overhead.main, []))
+    print("=" * 72)
+    print("## epsilon_audit (Assumption A.3 / Theorem 5.1)")
+    results.append(_timed("epsilon_audit", epsilon_audit.main, []))
+    print("=" * 72)
+    print("## perf_h3_projection (§Perf H3: JL-projected selection)")
+    results.append(_timed("perf_h3_projection", perf_h3_projection.main,
+                          []))
+
+    if not args.skip_fl:
+        print("=" * 72)
+        print(f"## table2_accuracy_time (scale={args.scale})")
+        results.append(_timed(
+            "table2_accuracy_time", table2_accuracy_time.main,
+            ["--scale", args.scale]))
+        print("=" * 72)
+        print("## fig3_convergence")
+        results.append(_timed("fig3_convergence", fig3_convergence.main,
+                              ["--scale", args.scale]))
+        print("=" * 72)
+        print("## fig4_round_distribution")
+        results.append(_timed("fig4_round_distribution",
+                              fig4_round_distribution.main,
+                              ["--scale", args.scale]))
+        print("=" * 72)
+        print("## fig5_epoch_tradeoff")
+        results.append(_timed("fig5_epoch_tradeoff",
+                              fig5_epoch_tradeoff.main,
+                              ["--scale", args.scale]))
+        print("=" * 72)
+        print("## convergence_rate (Theorem 5.1: O(eps) + O(1/R))")
+        results.append(_timed("convergence_rate", convergence_rate.main,
+                              []))
+
+    print("=" * 72)
+    print("## roofline (single-pod 16x16; see EXPERIMENTS.md §Roofline)")
+    dr = args.dryrun_jsonl if os.path.exists(args.dryrun_jsonl) else None
+    results.append(_timed("roofline", roofline.main,
+                          (["--dryrun", dr] if dr else [])))
+
+    print("=" * 72)
+    print("name,us_per_call,derived")
+    for name, dt, _ in results:
+        print(f"{name},{dt*1e6:.0f},wall_s={dt:.2f}")
+
+
+if __name__ == "__main__":
+    main()

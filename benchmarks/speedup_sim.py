@@ -1,0 +1,90 @@
+"""The 8x headline: expected round-time reduction vs FedAvg at PAPER scale.
+
+The paper's training-time claim is a property of the *timing model* (round
+time = max over selected clients of work/capability), so it can be
+reproduced exactly at the published scale (1000 MNIST clients, K=100,
+E=10, cⁱ~N(1,0.25), power-law mⁱ) without running the actual training —
+each strategy's per-client work model is applied to the same sampled
+worlds.  This is the full-scale companion to the (reduced-scale) live FL
+runs in table2_accuracy_time.py.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.data.partition import power_law_sizes
+from repro.fed.simulator import make_client_specs, straggler_deadline
+from repro.fed.strategies import FORWARD_FRAC
+
+
+def simulate(bench: str = "mnist", straggler_pct: float = 30.0,
+             rounds: int = 500, seed: int = 0):
+    params = {
+        "mnist": dict(n=1000, mean=69, std=106, k=100, epochs=10),
+        "shakespeare": dict(n=143, mean=3616, std=6808, k=10, epochs=10),
+        "synthetic": dict(n=30, mean=670, std=1148, k=10, epochs=10),
+    }[bench]
+    rng = np.random.default_rng(seed)
+    sizes = power_law_sizes(params["n"], params["mean"], params["std"], rng)
+    specs = make_client_specs(sizes, rng)
+    E = params["epochs"]
+    tau = straggler_deadline(specs, E, straggler_pct)
+
+    m = np.array([s.m for s in specs], float)
+    c = np.array([s.c for s in specs], float)
+    p = m / m.sum()
+
+    def fedcore_time(i):
+        if E * m[i] <= c[i] * tau:
+            return E * m[i] / c[i]
+        if c[i] * tau > m[i] and E > 1:
+            b = max(1, min(int((c[i] * tau - m[i]) // (E - 1)), int(m[i])))
+            w = m[i] + (E - 1) * b
+            if w <= c[i] * tau:
+                return w / c[i]
+        avail = c[i] * tau - FORWARD_FRAC * m[i]
+        b = max(1, min(int(avail // E), int(m[i])))
+        ep = max(1, min(E, int(avail // b)))
+        return (FORWARD_FRAC * m[i] + ep * b) / c[i]
+
+    fedavg, fedcore, fedprox, fedavg_ds = [], [], [], []
+    for _ in range(rounds):
+        sel = rng.choice(params["n"], size=params["k"], replace=True, p=p)
+        t_full = E * m[sel] / c[sel]
+        fedavg.append(t_full.max())
+        fedavg_ds.append(min(t_full.max(), tau))
+        fedprox.append(np.minimum(t_full, tau).max())
+        fedcore.append(max(fedcore_time(i) for i in sel))
+    out = {
+        "tau": tau,
+        "fedavg_mean_norm": float(np.mean(fedavg) / tau),
+        "fedavg_ds_mean_norm": float(np.mean(fedavg_ds) / tau),
+        "fedprox_mean_norm": float(np.mean(fedprox) / tau),
+        "fedcore_mean_norm": float(np.mean(fedcore) / tau),
+        "speedup_vs_fedavg": float(np.mean(fedavg) / np.mean(fedcore)),
+        "fedavg_p99_norm": float(np.percentile(fedavg, 99) / tau),
+    }
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=500)
+    args = ap.parse_args(argv)
+    print(f"{'bench':12s} {'s%':>4s} {'fedavg':>8s} {'ds':>6s} "
+          f"{'prox':>6s} {'core':>6s} {'speedup':>8s}  (mean t/tau)")
+    for bench in ("mnist", "shakespeare", "synthetic"):
+        for pct in (10.0, 30.0):
+            r = simulate(bench, pct, rounds=args.rounds)
+            print(f"{bench:12s} {pct:4.0f} {r['fedavg_mean_norm']:8.2f} "
+                  f"{r['fedavg_ds_mean_norm']:6.2f} "
+                  f"{r['fedprox_mean_norm']:6.2f} "
+                  f"{r['fedcore_mean_norm']:6.2f} "
+                  f"{r['speedup_vs_fedavg']:7.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

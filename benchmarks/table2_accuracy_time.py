@@ -1,0 +1,56 @@
+"""Table 2: test accuracy + normalized mean round time for the four
+strategies at 10% / 30% stragglers across the benchmarks."""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.flbench import STRATEGY_NAMES, run_benchmark
+
+
+def run(benches=("synthetic_1_1", "synthetic_0505", "synthetic_0_0"),
+        scale: str = "tiny", straggler_pcts=(10.0, 30.0), seed: int = 0,
+        verbose: bool = False):
+    rows = []
+    for bench in benches:
+        for pct in straggler_pcts:
+            res = run_benchmark(bench, scale, pct, seed, verbose=verbose)
+            for name in STRATEGY_NAMES:
+                s = res[name]["summary"]
+                rows.append({
+                    "bench": bench, "stragglers_pct": pct, "strategy": name,
+                    "test_acc": round(s["final_test_acc"], 4),
+                    "best_acc": round(s["best_test_acc"], 4),
+                    "mean_round_time_norm":
+                        round(s["mean_round_time_normalized"], 3),
+                    "exceeds_deadline":
+                        s["max_round_time_normalized"] > 1.001,
+                })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="tiny",
+                    choices=["tiny", "small", "paper"])
+    ap.add_argument("--benches", nargs="+",
+                    default=["synthetic_1_1", "synthetic_0505",
+                             "synthetic_0_0"])
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    t0 = time.perf_counter()
+    rows = run(tuple(args.benches), args.scale, verbose=args.verbose)
+    print(f"{'bench':16s} {'s%':4s} {'strategy':10s} {'acc':7s} "
+          f"{'t/round(norm)':13s} {'>tau'}")
+    for r in rows:
+        print(f"{r['bench']:16s} {r['stragglers_pct']:4.0f} "
+              f"{r['strategy']:10s} {r['test_acc']:7.4f} "
+              f"{r['mean_round_time_norm']:13.3f} "
+              f"{'YES' if r['exceeds_deadline'] else 'no'}")
+    print(f"# table2 wall time: {time.perf_counter()-t0:.1f}s")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

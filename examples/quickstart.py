@@ -1,0 +1,52 @@
+"""Quickstart: FedCore vs the baselines on the paper's Synthetic(1,1)
+benchmark — the 60-second tour of the whole system.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.data.partition import train_test_split_clients
+from repro.data.synthetic import synthetic_dataset
+from repro.fed.server import FLConfig, run_federated, summarize
+from repro.fed.simulator import make_client_specs
+from repro.fed.strategies import FedAvg, FedAvgDS, FedCore, FedProx, LocalTrainer
+from repro.models.small import LogisticRegression
+
+
+def main():
+    # 1. a federated world: 10 clients, power-law data, heterogeneous compute
+    clients = synthetic_dataset(alpha=1.0, beta=1.0, n_clients=10,
+                                mean_samples=120, std_samples=100, seed=0)
+    train, test = train_test_split_clients(clients)
+    specs = make_client_specs([len(d["y"]) for d in train],
+                              np.random.default_rng(0))
+    model = LogisticRegression()
+    cfg = FLConfig(rounds=10, clients_per_round=5, epochs=5, batch_size=8,
+                   lr=0.05, straggler_pct=30.0, eval_every=2)
+
+    # 2. run all four strategies under the same straggler deadline
+    print(f"{'strategy':10s} {'final acc':>10s} {'t/round (norm)':>15s} "
+          f"{'meets tau'}")
+    for name, make in {
+        "fedavg": lambda: FedAvg(LocalTrainer(model, cfg.lr,
+                                              cfg.batch_size)),
+        "fedavg_ds": lambda: FedAvgDS(LocalTrainer(model, cfg.lr,
+                                                   cfg.batch_size)),
+        "fedprox": lambda: FedProx(LocalTrainer(model, cfg.lr,
+                                                cfg.batch_size,
+                                                prox_mu=0.1)),
+        "fedcore": lambda: FedCore(LocalTrainer(model, cfg.lr,
+                                                cfg.batch_size)),
+    }.items():
+        out = run_federated(model, train, specs, make(), cfg, test)
+        s = summarize(out["history"], out["deadline"])
+        meets = "yes" if s["max_round_time_normalized"] <= 1.001 else "NO"
+        print(f"{name:10s} {s['final_test_acc']:10.4f} "
+              f"{s['mean_round_time_normalized']:15.3f} {meets:>9s}")
+
+    print("\nFedCore: deadline met AND accuracy preserved — the coresets "
+          "let stragglers contribute full-depth updates on time.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter decoder LM —
+centralized for a few hundred steps, then the same model federated across
+silos with FedCore coreset selection for stragglers.
+
+Full run (a few hundred steps of the 100M preset; use on real hardware):
+  PYTHONPATH=src python examples/train_lm_federated.py --preset 100m \
+      --steps 300
+
+CI scale (runs in ~2 min on 1 CPU core):
+  PYTHONPATH=src python examples/train_lm_federated.py --preset tiny \
+      --steps 20
+"""
+import argparse
+
+from repro.launch.train import PRESETS, train_centralized, train_fedcore_lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    print("== phase 1: centralized pretraining ==")
+    out = train_centralized(cfg, args.steps, args.batch, args.seq, 3e-4,
+                            ckpt_dir=None, log_every=max(1, args.steps // 5),
+                            seed=0)
+    print(f"loss {out['initial_loss']:.4f} -> {out['final_loss']:.4f}")
+
+    print("== phase 2: federated fine-tuning with FedCore coresets ==")
+    train_fedcore_lm(cfg, rounds=2, steps_per_epoch=4, silos=3,
+                     batch=args.batch, seq=args.seq, lr=1e-3,
+                     straggler_pct=34.0, seed=0)
+
+
+if __name__ == "__main__":
+    main()

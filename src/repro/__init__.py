@@ -1,0 +1,11 @@
+"""repro: FedCore (straggler-free FL with distributed coresets) in JAX.
+
+Public entry points:
+  repro.core        — coreset selection (the paper's contribution)
+  repro.fed         — federated runtime + strategies
+  repro.models      — model zoo (assigned architectures + paper models)
+  repro.kernels     — Pallas TPU kernels (ops/ref)
+  repro.configs     — architecture registry
+  repro.launch      — train / serve / dryrun drivers
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,7 @@
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    load_pytree,
+    save_pytree,
+    latest_checkpoint,
+    save_server_state,
+    load_server_state,
+)

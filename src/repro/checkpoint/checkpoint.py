@@ -1,0 +1,108 @@
+"""npz-based pytree checkpointing (flat key-path encoding, no extra deps).
+
+Round-resumable server state = {params, round, rng_state} saved atomically
+(write temp + rename) so an interrupted run never corrupts the latest file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves_with_paths:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_pytree(path: str, tree) -> None:
+    flat = _flatten(tree)
+    directory = os.path.dirname(os.path.abspath(path))
+    os.makedirs(directory, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, like=None):
+    """Load a pytree.  If `like` is given, restore its exact structure."""
+    with np.load(path, allow_pickle=False) as data:
+        flat = {k: data[k] for k in data.files if k != "__treedef__"}
+    if like is not None:
+        leaves_with_paths = jax.tree_util.tree_flatten_with_path(like)
+        paths = [_SEP.join(_path_str(p) for p in path)
+                 for path, _ in leaves_with_paths[0]]
+        leaves = [jnp.asarray(flat[p]) for p in paths]
+        return jax.tree_util.tree_unflatten(leaves_with_paths[1], leaves)
+    # otherwise reconstruct nested dicts from the path encoding
+    out: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(val)
+    return out
+
+
+def latest_checkpoint(directory: str, prefix: str = "ckpt_"
+                      ) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    best, best_step = None, -1
+    for name in os.listdir(directory):
+        m = re.fullmatch(rf"{re.escape(prefix)}(\d+)\.npz", name)
+        if m and int(m.group(1)) > best_step:
+            best_step = int(m.group(1))
+            best = os.path.join(directory, name)
+    return best
+
+
+def save_server_state(directory: str, round_idx: int, params,
+                      extra: Optional[Dict[str, Any]] = None,
+                      prefix: str = "ckpt_") -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"{prefix}{round_idx:06d}.npz")
+    save_pytree(path, params)
+    meta = {"round": round_idx, **(extra or {})}
+    with open(os.path.join(directory, f"{prefix}{round_idx:06d}.json"),
+              "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def load_server_state(directory: str, like=None, prefix: str = "ckpt_"
+                      ) -> Tuple[Optional[Any], int]:
+    path = latest_checkpoint(directory, prefix)
+    if path is None:
+        return None, -1
+    params = load_pytree(path, like)
+    meta_path = path.replace(".npz", ".json")
+    round_idx = -1
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            round_idx = json.load(f).get("round", -1)
+    return params, round_idx

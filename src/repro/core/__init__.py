@@ -1,0 +1,21 @@
+"""FedCore's primary contribution: distributed coreset selection.
+
+Coreset problem (Eq.2) -> k-medoids reformulation (Eq.5) -> gradient-proxy
+features (§4.3), plus the ε-approximation audit for Assumption A.3.
+"""
+from repro.core.coreset import (  # noqa: F401
+    Coreset,
+    FedCoreConfig,
+    build_coreset,
+    coreset_batch,
+    coreset_budget,
+    coreset_epsilon,
+    needs_coreset,
+)
+from repro.core.gradients import grad_features, true_per_sample_grads  # noqa: F401
+from repro.core.kmedoids import (  # noqa: F401
+    KMedoidsResult,
+    kmedoids_jax,
+    kmedoids_numpy,
+    pairwise_sq_dists,
+)

@@ -1,0 +1,115 @@
+"""FedCore coreset construction (paper §3.2, §4.2, §4.3).
+
+The coreset problem (Eq. 2) is upper-bounded (Eq. 3-4) and solved as a
+k-medoids instance (Eq. 5) over *gradient features*:
+
+  * convex models      -> input-space features  (d̃ⱼₖ = ‖xⱼ − xₖ‖)
+  * deep networks      -> last-layer gradient features
+                          (d̂ⱼₖ = ‖∂Lⱼ/∂zⱼ − ∂Lₖ/∂zₖ‖, §4.3)
+
+The budget (§4.2): the first epoch of a round runs the full set (mⁱ samples,
+producing the features); the remaining E−1 epochs run the coreset, so
+
+    bⁱ = ⌊(cⁱ·τ − mⁱ) / (E − 1)⌋.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmedoids import (KMedoidsResult, kmedoids_jax,
+                                 kmedoids_numpy, pairwise_sq_dists)
+
+
+class Coreset(NamedTuple):
+    indices: jnp.ndarray   # (k,) int32 — selected sample indices Sⁱ
+    weights: jnp.ndarray   # (k,) float32 — δⁱ (cluster sizes)
+    objective: jnp.ndarray  # scalar — the Eq.(5) k-medoids objective
+    assignment: jnp.ndarray  # (m,) int32 — Φⁱ mapping (by medoid slot)
+
+
+def coreset_budget(m: int, capability: float, deadline: float,
+                   epochs: int) -> int:
+    """bⁱ = ⌊(cⁱτ − mⁱ)/(E−1)⌋ clipped to [1, mⁱ] (paper §4.2)."""
+    if epochs <= 1:
+        return m
+    b = int(np.floor((capability * deadline - m) / (epochs - 1)))
+    return max(1, min(b, m))
+
+
+def needs_coreset(m: int, capability: float, deadline: float,
+                  epochs: int) -> bool:
+    """Alg. 1 line 6: full-set training iff E·mⁱ ≤ cⁱτ."""
+    return epochs * m > capability * deadline
+
+
+def build_coreset(features: jnp.ndarray, budget: int, *,
+                  backend: str = "jax", use_kernel: bool = False,
+                  max_sweeps: int = 50,
+                  projection_dim: Optional[int] = None) -> Coreset:
+    """Solve Eq.(5) on the given per-sample feature matrix (m, F).
+
+    Distances are Euclidean in feature space — exactly d̃ (input features) or
+    d̂ (last-layer gradient features) depending on what the caller passes.
+    ``projection_dim`` applies a JL random projection first (§Perf H3).
+    """
+    m = features.shape[0]
+    budget = min(budget, m)
+    if projection_dim is not None:
+        from repro.core.gradients import project_features
+        features = project_features(features, projection_dim)
+    D2 = pairwise_sq_dists(features, use_kernel=use_kernel)
+    D = jnp.sqrt(jnp.maximum(D2, 0.0))
+    if backend == "numpy":
+        res = kmedoids_numpy(np.asarray(D), budget, max_sweeps=max_sweeps)
+    else:
+        res = kmedoids_jax(D, budget, max_sweeps=max_sweeps)
+    return Coreset(indices=res.medoids,
+                   weights=res.weights.astype(jnp.float32),
+                   objective=res.objective,
+                   assignment=res.assignment)
+
+
+def coreset_epsilon(grads_full: jnp.ndarray, coreset: Coreset) -> jnp.ndarray:
+    """Audit Assumption A.3 on *true* per-sample gradients.
+
+    grads_full: (m, P) matrix of per-sample gradients (flattened).
+    Returns ε = (1/m)‖Σⱼ gⱼ − Σₖ δₖ g_{medoid k}‖₂.
+    """
+    m = grads_full.shape[0]
+    full = jnp.sum(grads_full, axis=0)
+    sel = grads_full[coreset.indices]
+    approx = jnp.sum(sel * coreset.weights[:, None], axis=0)
+    return jnp.linalg.norm(full - approx) / m
+
+
+def coreset_batch(data: dict, coreset: Coreset, m_full: int) -> dict:
+    """Materialize the weighted coreset training set from a client dataset.
+
+    Weights are δₖ·(k not dropped)/mⁱ-normalized implicitly by the weighted
+    loss (which divides by Σw), matching Eq.(9)'s (1/mⁱ)Σδₖ∇Lₖ since
+    Σₖ δₖ = mⁱ.
+    """
+    idx = np.asarray(coreset.indices)
+    out = {k: v[idx] for k, v in data.items() if k != "weights"}
+    out["weights"] = jnp.asarray(coreset.weights, jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# configuration record for the FL runtime
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FedCoreConfig:
+    epochs: int = 10             # E
+    deadline: Optional[float] = None  # τ (seconds); None = no deadline
+    backend: str = "jax"         # kmedoids solver
+    use_kernel: bool = False     # pairwise distances via Pallas kernel
+    max_sweeps: int = 50
+    refresh_every_round: bool = True  # paper: re-select each round
+    projection_dim: Optional[int] = None  # JL projection (§Perf H3)

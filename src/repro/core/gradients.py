@@ -1,0 +1,82 @@
+"""Gradient-feature extraction for FedCore (§4.3).
+
+``grad_features(model, params, data)`` returns the (m, F) matrix the
+k-medoids clustering runs on:
+
+  * ``feature_space == "input"``           — convex models: the raw inputs
+    (d̃ⱼₖ = ‖xⱼ − xₖ‖; static across rounds, Allen-Zhu-style bound).
+  * ``feature_space == "last_layer_grad"`` — DNNs: ∂L/∂z at the last layer
+    input, computed **in closed form** from the softmax residual pulled back
+    through the output matrix — one forward pass, no per-sample backprop
+    (the paper's "attainable from the first epoch ... no extra computation").
+
+``true_per_sample_grads`` computes exact per-sample full-model gradients with
+vmap-of-grad — O(m) backprops, used only by tests and the ε-audit benchmark
+to certify the proxy (never in the training path).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def grad_features(model, params, data: dict, batch_size: int = 512
+                  ) -> jnp.ndarray:
+    """Per-sample gradient features for a whole client dataset."""
+    space = getattr(model, "feature_space", "last_layer_grad")
+    if space == "input":
+        x = data["x"]
+        return x.reshape(x.shape[0], -1)
+    m = _num_examples(data)
+    feats = []
+    for lo in range(0, m, batch_size):
+        batch = {k: v[lo:lo + batch_size] for k, v in data.items()}
+        feats.append(model.grad_features(params, batch))
+    return jnp.concatenate(feats, axis=0)
+
+
+def true_per_sample_grads(loss_fn: Callable, params, data: dict,
+                          batch_size: int = 64) -> np.ndarray:
+    """Exact per-sample gradients, flattened to (m, P).  Test/audit only."""
+
+    def single(p, example):
+        batch = {k: v[None] for k, v in example.items()}
+        loss, _ = loss_fn(p, batch)
+        return loss
+
+    grad_one = jax.grad(single)
+    vgrad = jax.jit(jax.vmap(grad_one, in_axes=(None, 0)))
+    m = _num_examples(data)
+    outs = []
+    for lo in range(0, m, batch_size):
+        batch = {k: v[lo:lo + batch_size] for k, v in data.items()}
+        g = vgrad(params, batch)
+        flat = jnp.concatenate(
+            [x.reshape(x.shape[0], -1) for x in jax.tree.leaves(g)], axis=1)
+        outs.append(np.asarray(flat))
+    return np.concatenate(outs, axis=0)
+
+
+def _num_examples(data: dict) -> int:
+    return next(iter(data.values())).shape[0]
+
+
+def project_features(feats: jnp.ndarray, dim: int, seed: int = 0
+                     ) -> jnp.ndarray:
+    """Johnson-Lindenstrauss random projection of gradient features.
+
+    Beyond-paper optimization (EXPERIMENTS.md §Perf H3): the k-medoids
+    distance matrix costs O(m²·F); projecting the (m, F) features to
+    F' = dim with a scaled Gaussian matrix preserves pairwise distances to
+    (1±ε) w.h.p. while cutting the distance-matrix FLOPs by F/F'.
+    No-op if dim >= F.
+    """
+    m, f = feats.shape
+    if dim >= f:
+        return feats
+    key = jax.random.PRNGKey(seed)
+    proj = jax.random.normal(key, (f, dim), feats.dtype) / jnp.sqrt(dim)
+    return feats @ proj

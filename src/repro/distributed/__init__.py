@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    batch_specs,
+    decode_state_specs,
+    param_specs,
+    shard_batch_axes,
+)
+from repro.distributed.fedavg_mesh import fedavg_allreduce  # noqa: F401

@@ -1,0 +1,172 @@
+"""Sharding rules: map every param / input / decode-state leaf to a
+PartitionSpec for the production mesh.
+
+Baseline layout ("tp"): tensor parallelism over the ``model`` axis, pure
+data parallelism over ``pod``x``data`` (params replicated there).  The
+"fsdp" mode additionally shards the params' other large dim over ``data``
+(ZeRO-3 style) — one of the beyond-paper perf iterations.
+
+Rules are matched on the flattened key path of each leaf, most-specific
+first; anything unmatched is replicated.  All rules respect divisibility:
+a dim is only sharded if its size divides the axis size (otherwise the
+leaf silently falls back to replication on that dim — important for GQA
+caches with kv_heads < model-axis size).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axis assignments whose size doesn't divide the dim."""
+    out = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape)
+                                                         - len(spec))):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# (path regex, spec builder); specs are written for the *unstacked* trailing
+# dims — stacked layer params get a leading None automatically by _fit
+# (the L dim never divides evenly and is never sharded).
+def _param_rules(cfg: ModelConfig, fsdp: bool):
+    d_ax = "data" if fsdp else None  # ZeRO dim
+    return [
+        # embeddings / unembedding: vocab over model
+        (r"\bembed\b$", lambda s: P("model", d_ax)),
+        (r"\bw_unembed\b$", lambda s: P(d_ax, "model")),
+        # attention
+        (r"attn.*\bwq\b$|attn.*\bwk\b$|attn.*\bwv\b$|xattn.*\bw[qkv]\b$",
+         lambda s: P(d_ax, "model")),
+        (r"attn.*\bwo\b$|xattn.*\bwo\b$", lambda s: P("model", d_ax)),
+        # dense mlp
+        (r"mlp.*\bw_gate\b$|mlp.*\bw_up\b$|shared.*\bw_gate\b$|"
+         r"shared.*\bw_up\b$", lambda s: P(d_ax, "model")),
+        (r"mlp.*\bw_down\b$|shared.*\bw_down\b$", lambda s: P("model", d_ax)),
+        # MoE: experts over model (expert parallelism)
+        (r"moe.*\bw_gate\b$|moe.*\bw_up\b$", lambda s: P("model", d_ax,
+                                                         None)),
+        (r"moe.*\bw_down\b$", lambda s: P("model", None, d_ax)),
+        (r"moe.*\brouter\b$", lambda s: P(d_ax, None)),
+        # mamba2: inner projections sharded on the wide dim
+        (r"\bw_in\b$", lambda s: P(d_ax, "model")),
+        (r"\bw_out\b$", lambda s: P("model", d_ax)),
+        (r"\bconv_w\b$", lambda s: P(None, "model")),
+        (r"\bconv_b\b$", lambda s: P("model")),
+        # zamba shared concat projection
+        (r"\bshared_in\b$", lambda s: P(d_ax, "model")),
+        # xlstm
+        (r"\bwq\b$|\bwk\b$|\bwv\b$|\bwo_gate\b$", lambda s: P(d_ax, "model")),
+        (r"\br\b$", lambda s: P(None, "model", None, None)),
+    ]
+
+
+def param_specs(cfg: ModelConfig, params_shapes, mesh: Mesh,
+                mode: str = "tp"):
+    """params_shapes: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    rules = _param_rules(cfg, fsdp=(mode == "fsdp"))
+
+    flat = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for path, leaf in flat[0]:
+        key = "/".join(_p(p) for p in path)
+        spec = P()
+        for pattern, builder in rules:
+            if re.search(pattern, key):
+                raw = builder(leaf.shape)
+                # stacked-layer params: shift spec right past the L dim
+                if _is_stacked(key, leaf.shape, raw):
+                    raw = P(None, *tuple(raw))
+                spec = _fit(raw, leaf.shape, mesh)
+                break
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def _is_stacked(key: str, shape, raw: P) -> bool:
+    """Heuristic: stacked layer params carry a leading L dim."""
+    return ("layers" in key and len(shape) == len(tuple(raw)) + 1)
+
+
+def _p(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# batch / decode-state rules
+# ---------------------------------------------------------------------------
+
+def shard_batch_axes(mesh: Mesh) -> tuple:
+    return tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+
+
+def batch_specs(batch_shapes, mesh: Mesh):
+    """Shard the leading batch dim over (pod, data) when divisible."""
+    axes = shard_batch_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return P()
+        return _fit(P(axes), leaf.shape, mesh)
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def decode_state_specs(cfg: ModelConfig, state_shapes, mesh: Mesh,
+                       context_parallel: bool = False):
+    """KV caches: batch over (pod, data); kv-heads over model when they
+    divide; with ``context_parallel=True`` the cache *sequence* dim is
+    sharded over model instead (for GQA archs whose kv_heads < |model|) —
+    a beyond-paper perf option exercised in §Perf.
+    """
+    axes = shard_batch_axes(mesh)
+
+    def one(path, leaf):
+        key = "/".join(_p(p) for p in path)
+        shape = leaf.shape
+        if "kv" in key and leaf.ndim == 5:      # (L, B, S, Hk, hd)
+            if context_parallel:
+                spec = P(None, axes, "model", None, None)
+            else:
+                spec = P(None, axes, None, "model", None)
+            return _fit(spec, shape, mesh)
+        if "enc_" in key and leaf.ndim == 4:    # (L, B, S_enc, Hk, hd)? 4/5d
+            return _fit(P(None, axes, None, None, None), shape, mesh)
+        if "mamba" in key and leaf.ndim >= 3:   # (L, B, nh, hd, n) / conv
+            if leaf.ndim == 5:
+                return _fit(P(None, axes, "model", None, None), shape, mesh)
+            return _fit(P(None, axes, None, "model"), shape, mesh)
+        if leaf.ndim >= 2:                      # xlstm block states (B, H,..)
+            return _fit(P(axes, "model"), shape, mesh)
+        return _fit(P(axes), shape, mesh)
+
+    flat = jax.tree_util.tree_flatten_with_path(state_shapes)
+    specs = [one(path, leaf) for path, leaf in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], specs)

@@ -1,0 +1,24 @@
+from repro.fed.server import (  # noqa: F401
+    FLConfig,
+    RoundRecord,
+    run_federated,
+    sample_clients,
+    summarize,
+)
+from repro.fed.simulator import (  # noqa: F401
+    ClientSpec,
+    make_client_specs,
+    sample_capabilities,
+    straggler_deadline,
+    straggler_mask,
+)
+from repro.fed.strategies import (  # noqa: F401
+    STRATEGIES,
+    ClientResult,
+    FedAvg,
+    FedAvgDS,
+    FedCore,
+    FedProx,
+    LocalTrainer,
+    Strategy,
+)

@@ -1,0 +1,147 @@
+"""Federated server: round loop, client sampling, aggregation, history.
+
+Implements Alg. 1's outer loop: sample K clients ∝ pⁱ = mⁱ/Σm with
+replacement (Assumption A.6), broadcast (w_r, τ), collect local updates via
+the strategy, aggregate w_{r+1} = (1/K) Σ w_rⁱ.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.simulator import ClientSpec, straggler_deadline
+from repro.fed.strategies import ClientResult, Strategy
+from repro.utils.tree import tree_weighted_mean
+
+
+@dataclasses.dataclass
+class FLConfig:
+    rounds: int = 20
+    clients_per_round: int = 10
+    epochs: int = 10              # E
+    batch_size: int = 8
+    lr: float = 0.03
+    straggler_pct: float = 30.0   # s
+    deadline: Optional[float] = None  # τ; None => derived from straggler_pct
+    eval_every: int = 1
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    sim_round_time: float          # max over participating clients
+    client_times: List[float]
+    n_participants: int
+    n_dropped: int
+    n_coreset: int
+    train_loss: float
+    test_acc: float = float("nan")
+    test_loss: float = float("nan")
+    wall_time: float = 0.0
+
+
+def sample_clients(specs: Sequence[ClientSpec], k: int,
+                   rng: np.random.Generator) -> List[int]:
+    p = np.array([s.m for s in specs], np.float64)
+    p /= p.sum()
+    return list(rng.choice(len(specs), size=k, replace=True, p=p))
+
+
+def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
+                  specs: List[ClientSpec], strategy: Strategy,
+                  cfg: FLConfig, test_data: Optional[Dict] = None,
+                  init_params=None, eval_batch: int = 512,
+                  verbose: bool = False) -> Dict[str, Any]:
+    rng = np.random.default_rng(cfg.seed)
+    params = (init_params if init_params is not None
+              else model.init(jax.random.PRNGKey(cfg.seed)))
+    deadline = cfg.deadline
+    if deadline is None:
+        deadline = straggler_deadline(specs, cfg.epochs, cfg.straggler_pct)
+
+    history: List[RoundRecord] = []
+    eval_fn = _make_eval(model, test_data, eval_batch) if test_data else None
+
+    for r in range(cfg.rounds):
+        t0 = time.perf_counter()
+        selected = sample_clients(specs, cfg.clients_per_round, rng)
+        results: List[ClientResult] = []
+        dropped = 0
+        for cid in selected:
+            res = strategy.local_update(params, clients_data[cid],
+                                        specs[cid], deadline, cfg.epochs,
+                                        rng)
+            if res is None:
+                dropped += 1
+            else:
+                results.append(res)
+
+        if results:
+            params = tree_weighted_mean([r_.params for r_ in results],
+                                        [1.0] * len(results))
+        times = [r_.sim_time for r_ in results]
+        # dropped stragglers in FedAvg-DS still busy until τ
+        round_time = max(times + ([deadline] if dropped else [0.0]))
+        train_loss = float(np.mean([r_.final_loss for r_ in results])
+                           ) if results else float("nan")
+        rec = RoundRecord(
+            round=r, sim_round_time=round_time, client_times=times,
+            n_participants=len(results), n_dropped=dropped,
+            n_coreset=sum(r_.used_coreset for r_ in results),
+            train_loss=train_loss, wall_time=time.perf_counter() - t0)
+        if eval_fn and (r % cfg.eval_every == 0 or r == cfg.rounds - 1):
+            rec.test_acc, rec.test_loss = eval_fn(params)
+        history.append(rec)
+        if verbose:
+            print(f"[{strategy.name}] round {r:3d} "
+                  f"time {round_time:8.1f}s loss {train_loss:.4f} "
+                  f"acc {rec.test_acc:.4f} (core {rec.n_coreset}, "
+                  f"drop {dropped})")
+
+    return {
+        "params": params,
+        "history": history,
+        "deadline": deadline,
+        "strategy": strategy.name,
+    }
+
+
+def _make_eval(model, test_data, eval_batch: int):
+    @jax.jit
+    def _acc(params, batch):
+        return model.accuracy(params, batch), model.loss(params, batch)[0]
+
+    def eval_fn(params):
+        m = len(next(iter(test_data.values())))
+        accs, losses, ns = [], [], []
+        for lo in range(0, m, eval_batch):
+            batch = {k: jnp.asarray(v[lo:lo + eval_batch])
+                     for k, v in test_data.items()}
+            a, l = _acc(params, batch)
+            n = len(next(iter(batch.values())))
+            accs.append(float(a) * n)
+            losses.append(float(l) * n)
+            ns.append(n)
+        return sum(accs) / sum(ns), sum(losses) / sum(ns)
+
+    return eval_fn
+
+
+def summarize(history: List[RoundRecord], deadline: float) -> Dict[str, float]:
+    times = np.array([h.sim_round_time for h in history])
+    accs = np.array([h.test_acc for h in history])
+    accs = accs[~np.isnan(accs)]
+    return {
+        "mean_round_time": float(times.mean()),
+        "mean_round_time_normalized": float(times.mean() / deadline),
+        "max_round_time_normalized": float(times.max() / deadline),
+        "final_test_acc": float(accs[-1]) if len(accs) else float("nan"),
+        "best_test_acc": float(accs.max()) if len(accs) else float("nan"),
+        "final_train_loss": float(history[-1].train_loss),
+    }

@@ -1,0 +1,50 @@
+"""System-heterogeneity simulator (paper §6.1 "Implementations").
+
+Each client i gets a compute capability cⁱ ~ N(1, 0.25) (samples/sec,
+clipped positive); training one sample for one epoch costs 1/cⁱ seconds, so
+a full round costs E·mⁱ/cⁱ.  The per-round deadline τ is chosen so that the
+slowest s% of clients cannot complete full-set training in time — those are
+the stragglers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientSpec:
+    cid: int
+    m: int          # training-set size
+    c: float        # capability (samples / second)
+
+    def full_round_time(self, epochs: int) -> float:
+        return epochs * self.m / self.c
+
+
+def sample_capabilities(n_clients: int, rng: np.random.Generator,
+                        mean: float = 1.0, var: float = 0.25,
+                        floor: float = 0.05) -> np.ndarray:
+    c = rng.normal(mean, np.sqrt(var), n_clients)
+    return np.maximum(c, floor)
+
+
+def make_client_specs(sizes: Sequence[int], rng: np.random.Generator
+                      ) -> List[ClientSpec]:
+    caps = sample_capabilities(len(sizes), rng)
+    return [ClientSpec(cid=i, m=int(m), c=float(c))
+            for i, (m, c) in enumerate(zip(sizes, caps))]
+
+
+def straggler_deadline(specs: Sequence[ClientSpec], epochs: int,
+                       straggler_pct: float) -> float:
+    """τ such that the slowest `straggler_pct`% of clients exceed it."""
+    times = np.array([s.full_round_time(epochs) for s in specs])
+    return float(np.percentile(times, 100.0 - straggler_pct))
+
+
+def straggler_mask(specs: Sequence[ClientSpec], epochs: int, deadline: float
+                   ) -> np.ndarray:
+    return np.array([s.full_round_time(epochs) > deadline for s in specs])

@@ -1,0 +1,222 @@
+"""Client-update strategies: FedAvg, FedAvg-DS, FedProx, FedCore (Alg. 1).
+
+A strategy consumes the round-start global params and a client's local data
++ hardware spec, and returns the locally-trained params together with the
+*simulated* wall-clock time the update would have taken on that client
+(work-units / capability — the paper's timing model, §3.1/§6.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coreset import (FedCoreConfig, build_coreset, coreset_batch,
+                                coreset_budget, needs_coreset)
+from repro.core.gradients import grad_features
+from repro.data.batching import epoch_batches
+from repro.fed.simulator import ClientSpec
+from repro.models.training import make_train_step
+from repro.optim.optimizers import sgd
+
+FORWARD_FRAC = 1.0 / 3.0  # forward-only pass cost relative to a train step
+
+
+@dataclasses.dataclass
+class ClientResult:
+    params: Any
+    n_samples: int          # aggregation weight basis (mⁱ)
+    sim_time: float         # simulated seconds for this round
+    used_coreset: bool = False
+    coreset_size: int = 0
+    epochs_done: float = 0.0
+    final_loss: float = 0.0
+
+
+def _pad_batch(batch: Dict[str, np.ndarray], batch_size: int
+               ) -> Dict[str, np.ndarray]:
+    """Pad final partial batches to a fixed shape with zero-weight rows."""
+    m = len(next(iter(batch.values())))
+    if m == batch_size:
+        if "weights" not in batch:
+            batch = dict(batch, weights=np.ones(m, np.float32))
+        return batch
+    pad = batch_size - m
+    out = {}
+    for k, v in batch.items():
+        out[k] = np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
+    w = out.get("weights", np.ones(batch_size, np.float32)).copy()
+    if "weights" not in batch:
+        w = np.ones(batch_size, np.float32)
+    w[m:] = 0.0
+    out["weights"] = w.astype(np.float32)
+    return out
+
+
+class LocalTrainer:
+    """Holds the jitted step functions shared by every client/strategy."""
+
+    def __init__(self, model, lr: float, batch_size: int,
+                 prox_mu: float = 0.0):
+        self.model = model
+        self.batch_size = batch_size
+        self.prox_mu = prox_mu
+        opt = sgd(lr)
+        self.opt = opt
+        self._step = make_train_step(model.loss, opt, prox_mu=prox_mu,
+                                     donate=False)
+
+    def run_epochs(self, params, data, epochs: int, rng, prox_ref=None,
+                   max_steps: Optional[int] = None):
+        opt_state = self.opt.init(params)
+        steps = 0
+        last = 0.0
+        stop = False
+        for _ in range(int(np.ceil(epochs))):
+            for batch in epoch_batches(data, self.batch_size, rng):
+                batch = _pad_batch(batch, self.batch_size)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                params, opt_state, metrics = self._step(params, opt_state,
+                                                        batch, prox_ref)
+                last = float(metrics["loss"])
+                steps += 1
+                if max_steps is not None and steps >= max_steps:
+                    stop = True
+                    break
+            if stop:
+                break
+        return params, steps, last
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+class Strategy:
+    name = "base"
+    deadline_aware = True
+
+    def __init__(self, trainer: LocalTrainer):
+        self.trainer = trainer
+
+    def local_update(self, global_params, data, spec: ClientSpec,
+                     deadline: float, epochs: int, rng
+                     ) -> Optional[ClientResult]:
+        raise NotImplementedError
+
+
+class FedAvg(Strategy):
+    """Vanilla FedAvg — deadline-oblivious (the straggler-exposed baseline)."""
+    name = "fedavg"
+    deadline_aware = False
+
+    def local_update(self, global_params, data, spec, deadline, epochs, rng):
+        params, _, loss = self.trainer.run_epochs(global_params, data,
+                                                  epochs, rng)
+        return ClientResult(params, spec.m, spec.full_round_time(epochs),
+                            epochs_done=epochs, final_loss=loss)
+
+
+class FedAvgDS(Strategy):
+    """FedAvg with Deadline: stragglers are simply dropped from the round."""
+    name = "fedavg_ds"
+
+    def local_update(self, global_params, data, spec, deadline, epochs, rng):
+        t = spec.full_round_time(epochs)
+        if t > deadline:
+            return None  # dropped
+        params, _, loss = self.trainer.run_epochs(global_params, data,
+                                                  epochs, rng)
+        return ClientResult(params, spec.m, t, epochs_done=epochs,
+                            final_loss=loss)
+
+
+class FedProx(Strategy):
+    """Proximal term + partial work: stragglers train as many samples as fit
+    within τ (Li et al., 2020)."""
+    name = "fedprox"
+
+    def local_update(self, global_params, data, spec, deadline, epochs, rng):
+        full_t = spec.full_round_time(epochs)
+        if full_t <= deadline:
+            steps = None
+            sim_t = full_t
+            eff_epochs = float(epochs)
+        else:
+            samples_budget = spec.c * deadline
+            steps = max(1, int(samples_budget // self.trainer.batch_size))
+            sim_t = min(deadline,
+                        steps * self.trainer.batch_size / spec.c)
+            eff_epochs = steps * self.trainer.batch_size / spec.m
+        params, _, loss = self.trainer.run_epochs(
+            global_params, data, epochs, rng, prox_ref=global_params,
+            max_steps=steps)
+        return ClientResult(params, spec.m, sim_t, epochs_done=eff_epochs,
+                            final_loss=loss)
+
+
+class FedCore(Strategy):
+    """Alg. 1: full-set first epoch -> gradient features -> k-medoids coreset
+    -> E−1 coreset epochs (or the §4.4 forward-only fallback)."""
+    name = "fedcore"
+
+    def __init__(self, trainer: LocalTrainer, core_cfg: FedCoreConfig
+                 | None = None):
+        super().__init__(trainer)
+        self.core_cfg = core_cfg or FedCoreConfig()
+
+    def local_update(self, global_params, data, spec, deadline, epochs, rng):
+        model = self.trainer.model
+        if not needs_coreset(spec.m, spec.c, deadline, epochs):
+            params, _, loss = self.trainer.run_epochs(global_params, data,
+                                                      epochs, rng)
+            return ClientResult(params, spec.m, spec.full_round_time(epochs),
+                                epochs_done=epochs, final_loss=loss)
+
+        cc = self.core_cfg
+        can_full_first_epoch = spec.c * deadline > spec.m and epochs > 1
+        feats = grad_features(model, global_params, data)
+        eff_epochs = epochs
+        if can_full_first_epoch:
+            budget = coreset_budget(spec.m, spec.c, deadline, epochs)
+            work = spec.m + (epochs - 1) * budget
+            if work > spec.c * deadline:  # budget floored at 1 but too slow
+                can_full_first_epoch = False
+        if not can_full_first_epoch:
+            # §4.4 fallback: forward-only feature pass, coreset-only epochs;
+            # for extreme stragglers also shed epochs (footnote 2: beyond
+            # some point no partial-work scheme can meet τ).
+            avail = spec.c * deadline - FORWARD_FRAC * spec.m
+            budget = max(1, min(int(avail // epochs), spec.m))
+            eff_epochs = max(1, min(epochs, int(avail // budget)))
+            work = FORWARD_FRAC * spec.m + eff_epochs * budget
+
+        coreset = build_coreset(feats, budget, backend=cc.backend,
+                                use_kernel=cc.use_kernel,
+                                max_sweeps=cc.max_sweeps,
+                                projection_dim=cc.projection_dim)
+        cdata = coreset_batch(data, coreset, spec.m)
+
+        params = global_params
+        loss = 0.0
+        if can_full_first_epoch:
+            params, _, loss = self.trainer.run_epochs(params, data, 1, rng)
+            params, _, loss = self.trainer.run_epochs(params, cdata,
+                                                      epochs - 1, rng)
+        else:
+            params, _, loss = self.trainer.run_epochs(params, cdata,
+                                                      eff_epochs, rng)
+        return ClientResult(params, spec.m, work / spec.c, used_coreset=True,
+                            coreset_size=int(budget),
+                            epochs_done=eff_epochs, final_loss=loss)
+
+
+STRATEGIES = {
+    "fedavg": FedAvg,
+    "fedavg_ds": FedAvgDS,
+    "fedprox": FedProx,
+    "fedcore": FedCore,
+}

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+* ``pairwise_l2``      — the FedCore coreset distance matrix (MXU-tiled)
+* ``flash_attention``  — GQA causal/windowed flash attention
+* ``rmsnorm``          — fused RMSNorm
+
+``ops`` holds the jit'd public wrappers (padding, backend selection,
+interpret-mode on CPU); ``ref`` the pure-jnp oracles the tests assert
+against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: causal (optionally sliding-window) flash attention
+with GQA head mapping.
+
+Layout: q (B, Hq, S, hd), k/v (B, Hk, S, hd).  Grid = (B*Hq, S/bq, S/bk);
+the kv dimension is the minor-most grid axis, which TPU iterates
+sequentially per (bh, iq) cell, so the online-softmax running state
+(m, l, acc) lives in VMEM scratch and persists across kv steps.  The GQA
+mapping happens in the BlockSpec index_map (kv head = q head // q_per_kv) —
+no materialized KV repeat.  Fully-masked kv blocks are skipped with
+``pl.when`` (the causal/window block-level test), which on real hardware
+skips both the HBM->VMEM copy epilogue compute; the last kv step writes
+acc / l to the output tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, block_q: int, block_k: int, n_k: int,
+                  causal: bool, window: Optional[int]):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level mask test: is any (q, k) pair in this tile visible?
+    q_lo = iq * block_q
+    q_hi = q_lo + block_q - 1
+    k_lo = ik * block_k
+    k_hi = k_lo + block_k - 1
+    live = jnp.asarray(True)
+    if causal:
+        live = live & (k_lo <= q_hi)
+    if window is not None:
+        live = live & (k_hi > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q,
+                                                            block_k), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q,
+                                                            block_k), 1)
+        ok = jnp.ones((block_q, block_k), bool)
+        if causal:
+            ok &= k_pos <= q_pos
+        if window is not None:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           block_q: int = 256, block_k: int = 256,
+                           interpret: bool = False):
+    """q: (B, Hq, S, hd); k/v: (B, Hk, S, hd).  S must divide the blocks."""
+    b, hq, s, hd = q.shape
+    hk = k.shape[1]
+    assert hq % hk == 0
+    qpk = hq // hk
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    n_k = s // block_k
+    scale = float(scale if scale is not None else 1.0 / (hd ** 0.5))
+
+    grid = (b * hq, s // block_q, n_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_k=n_k, causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda bh, iq, ik: (bh // hq, bh % hq, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bh, iq, ik: (bh // hq, (bh % hq) // qpk,
+                                             ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bh, iq, ik: (bh // hq, (bh % hq) // qpk,
+                                             ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda bh, iq, ik: (bh // hq, bh % hq, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

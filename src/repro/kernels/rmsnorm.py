@@ -1,0 +1,40 @@
+"""Pallas TPU kernel: fused RMSNorm (row-tiled, fp32 reduction in VMEM).
+
+Small but ubiquitous: every layer of every assigned architecture calls it
+twice per token.  Fusing the square-mean reduction with the scale multiply
+keeps the activation in VMEM for a single HBM round-trip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)               # (bm, d)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-5,
+                   block_m: int = 256, interpret: bool = False):
+    """x: (m, d) — rows must divide block_m (ops.py pads)."""
+    m, d = x.shape
+    block_m = min(block_m, m)
+    assert m % block_m == 0
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

@@ -1,0 +1,36 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; smoke tests and benches see the single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (one v5e pod, 256 chips) or 2x16x16 (2 pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh on the single real device (tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axis names that carry the batch (pod + data when present)."""
+    names = mesh.axis_names
+    return tuple(n for n in ("pod", "data") if n in names)
+
+
+MESH_SPECS = {
+    "single": dict(multi_pod=False, chips=256,
+                   desc="16x16 (data, model) — one v5e pod"),
+    "multi": dict(multi_pod=True, chips=512,
+                  desc="2x16x16 (pod, data, model) — two v5e pods over DCN"),
+}

@@ -1,0 +1,92 @@
+"""Batched serving driver: prefill + KV-cache decode with greedy/temperature
+sampling for any architecture config.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.train import PRESETS
+from repro.models.model import Model
+
+
+def generate(model: Model, params, prompts: jnp.ndarray, gen: int,
+             temperature: float = 0.0, seed: int = 0, cache_len: int = 0):
+    """prompts: (B, P) int32 -> (B, P+gen) tokens."""
+    cfg = model.cfg
+    b, p_len = prompts.shape
+    cache_len = cache_len or (p_len + gen)
+    state = model.init_decode_state(params, b, cache_len, dtype=jnp.float32)
+
+    decode = jax.jit(model.decode_step)
+    key = jax.random.PRNGKey(seed)
+    tokens = [prompts]
+    logits = None
+    # prefill token-by-token through the decode path (cache-exact)
+    for t in range(p_len):
+        logits, state = decode(params, state, prompts[:, t:t + 1],
+                               jnp.asarray(t, jnp.int32))
+    cur = _sample(logits, temperature, key)
+    for t in range(gen):
+        tokens.append(cur)
+        logits, state = decode(params, state, cur,
+                               jnp.asarray(p_len + t, jnp.int32))
+        key, sub = jax.random.split(key)
+        cur = _sample(logits, temperature, sub)
+    return jnp.concatenate(tokens, axis=1)
+
+
+def _sample(logits, temperature, key):
+    if temperature <= 0:
+        return jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(
+            jnp.int32)
+    p = logits[:, -1, :] / temperature
+    return jax.random.categorical(key, p, axis=-1)[:, None].astype(jnp.int32)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny",
+                    choices=list(PRESETS) + ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (required on CPU)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (PRESETS[args.arch] if args.arch in PRESETS
+           else get_config(args.arch, smoke=args.smoke))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    t0 = time.perf_counter()
+    out = generate(model, params, prompts, args.gen, args.temperature,
+                   args.seed)
+    dt = time.perf_counter() - t0
+    tput = args.batch * args.gen / dt
+    print(f"[serve] arch={cfg.arch_id} batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen} "
+          f"-> {out.shape} in {dt:.2f}s ({tput_str(tput)})")
+    print("[serve] sample row:", np.asarray(out[0])[:24].tolist())
+    return out
+
+
+def tput_str(tput: float) -> str:
+    return f"{tput:,.1f} tok/s"
+
+
+if __name__ == "__main__":
+    main()

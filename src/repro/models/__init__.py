@@ -1,0 +1,7 @@
+from repro.models.model import IGNORE, Model  # noqa: F401
+from repro.models.small import CharLSTM, LogisticRegression, SmallCNN  # noqa: F401
+from repro.models.training import (  # noqa: F401
+    make_eval_step,
+    make_grad_fn,
+    make_train_step,
+)

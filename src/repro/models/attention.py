@@ -1,0 +1,264 @@
+"""Grouped-query attention with RoPE, sliding windows, KV-cache decode.
+
+Three implementations share one math definition:
+  * ``naive``    — materializes the (S, S) score matrix (small seq / oracle)
+  * ``chunked``  — flash-style online-softmax over KV blocks inside a scan
+                   over Q blocks; O(S * block) memory, lowers on any backend.
+  * ``pallas``   — the TPU kernel in ``repro.kernels.flash_attention``
+                   (validated vs `naive` in interpret mode; selected only when
+                   running on real TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d, hq, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, hq * hd),
+        "wk": dense_init(ks[1], d, hk * hd),
+        "wv": dense_init(ks[2], d, hk * hd),
+        "wo": dense_init(ks[3], hq * hd, d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mask helpers
+# ---------------------------------------------------------------------------
+
+def _causal_window_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """Additive bias (..., Sq, Sk) from position tensors."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), bool)
+    if causal:
+        ok = ok & (dk <= dq)
+    if window is not None:
+        ok = ok & (dk > dq - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,Hq,hd)  k: (B,Sk,Hk,hd) -> (B,Hq,Sq,Sk)."""
+    b, sq, hq, hd = q.shape
+    hk = k.shape[2]
+    q = q.reshape(b, sq, hk, hq // hk, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32)
+    return s.reshape(b, hq, sq, k.shape[1])
+
+
+def _gqa_out(p, v):
+    """p: (B,Hq,Sq,Sk)  v: (B,Sk,Hk,hd) -> (B,Sq,Hq,hd)."""
+    b, hq, sq, sk = p.shape
+    hk = v.shape[2]
+    p = p.reshape(b, hk, hq // hk, sq, sk)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(p.dtype))
+    return o.reshape(b, sq, hq, v.shape[3])
+
+
+# ---------------------------------------------------------------------------
+# full-sequence attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attend_naive(q, k, v, bias, scale):
+    s = _gqa_scores(q, k) * scale
+    s = s + jnp.broadcast_to(bias, s.shape[-2:])  # (Sq,Sk) broadcast
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    return _gqa_out(p, v).astype(q.dtype)
+
+
+def _attend_chunked(q, k, v, q_pos, k_pos, causal, window, scale,
+                    q_block: int = 512, kv_block: int = 1024):
+    """Flash-style two-level blocking with online softmax (pure jnp/lax)."""
+    b, sq, hq, hd = q.shape
+    sk = k.shape[1]
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    # pad to multiples
+    pq = (-sq) % q_block
+    pk = (-sk) % kv_block
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, pq),), constant_values=2**30)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, pk),), constant_values=-(2**30))
+    nq, nk = q.shape[1] // q_block, k.shape[1] // kv_block
+
+    qb = q.reshape(b, nq, q_block, hq, hd).transpose(1, 0, 2, 3, 4)
+    qpb = q_pos.reshape(nq, q_block)
+    kb = k.reshape(b, nk, kv_block, k.shape[2], hd)
+    vb = v.reshape(b, nk, kv_block, v.shape[2], hd)
+    kpb = k_pos.reshape(nk, kv_block)
+
+    def one_q_block(q_i, qp_i):
+        # online softmax over kv blocks
+        def step(carry, inp):
+            m, l, acc = carry
+            k_j, v_j, kp_j = inp
+            bias = _causal_window_bias(qp_i, kp_j, causal, window)  # (qb,kb)
+            s = _gqa_scores(q_i, k_j) * scale + bias                # (B,Hq,qb,kb)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqs,bhsd->bhqd", p, _expand_kv(v_j, hq).astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hq, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hq, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4), kpb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,qb,Hq,hd)
+
+    out = jax.lax.map(lambda args: one_q_block(*args), (qb, qpb))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nq * q_block, hq, hd)
+    return out[:, :sq]
+
+
+def _expand_kv(kv, hq):
+    """(B,S,Hk,hd) -> (B,S',Hq,hd) by repeating kv heads; returns (B,Hq,S,hd)."""
+    b, s, hk, hd = kv.shape
+    kv = jnp.repeat(kv, hq // hk, axis=2)
+    return kv.transpose(0, 2, 1, 3)  # (B,Hq,S,hd)
+
+
+def multihead_attention(params, cfg: ModelConfig, x, positions=None, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        impl: str = "chunked", kv_x=None, kv_positions=None,
+                        use_rope: bool = True):
+    """Full-sequence attention. kv_x != None => cross-attention.
+
+    x: (B, S, d); positions: (S,) int32.  Returns (B, S, d).
+    """
+    b, s, d = x.shape
+    hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    src = x if kv_x is None else kv_x
+    sk = src.shape[1]
+    if kv_positions is None:
+        kv_positions = (positions if kv_x is None
+                        else jnp.arange(sk, dtype=jnp.int32))
+
+    q = (x @ params["wq"]).reshape(b, s, hq, hd)
+    k = (src @ params["wk"]).reshape(b, sk, hk, hd)
+    v = (src @ params["wv"]).reshape(b, sk, hk, hd)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    if impl == "naive":
+        bias = _causal_window_bias(positions, kv_positions, causal, window)
+        out = _attend_naive(q, k, v, bias, scale)
+    elif impl == "chunked":
+        out = _attend_chunked(q, k, v, positions, kv_positions, causal,
+                              window, scale)
+    elif impl == "pallas":
+        # TPU kernel path (kernels/flash_attention.py); requires self-attn
+        # with contiguous positions (train/prefill), which is the hot case.
+        if kv_x is not None:
+            out = _attend_chunked(q, k, v, positions, kv_positions, causal,
+                                  window, scale)
+        else:
+            from repro.kernels.ops import flash_attention
+            out = flash_attention(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), causal=causal, window=window,
+                scale=float(scale)).transpose(0, 2, 1, 3)
+    else:
+        raise ValueError(f"unknown attention impl {impl!r}")
+    return out.reshape(b, s, hq * hd) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode (one token)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, n_layers: int, batch: int, seq_len: int,
+                  dtype=jnp.bfloat16):
+    w = cfg.attention_window
+    size = min(seq_len, w) if w else seq_len
+    shape = (n_layers, batch, size, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_slot_positions(cache_size: int, pos, window: Optional[int]):
+    """Position held by each ring-buffer slot at decode step `pos`.
+
+    Full cache (window None): slot i holds position i (valid if i <= pos).
+    Ring cache: slot i holds the largest p <= pos with p % size == i.
+    """
+    idx = jnp.arange(cache_size, dtype=jnp.int32)
+    if window is None:
+        return idx
+    return pos - ((pos - idx) % cache_size)
+
+
+def attention_decode(params, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
+                     window: Optional[int] = None, use_rope: bool = True):
+    """One-token decode.
+
+    x: (B, 1, d); cache_k/v: (B, S_cache, Hk, hd); pos: scalar int32 —
+    position of the *new* token.  Returns (out (B,1,d), new_k, new_v).
+    """
+    b, _, d = x.shape
+    hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    s_cache = cache_k.shape[1]
+
+    q = (x @ params["wq"]).reshape(b, 1, hq, hd)
+    k = (x @ params["wk"]).reshape(b, 1, hk, hd)
+    v = (x @ params["wv"]).reshape(b, 1, hk, hd)
+    posv = jnp.full((1,), pos, jnp.int32)
+    if use_rope:
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k = apply_rope(k, posv, cfg.rope_theta)
+
+    slot = pos % s_cache if window else jnp.minimum(pos, s_cache - 1)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, slot, 0, 0))
+
+    slot_pos = cache_slot_positions(s_cache, pos, window)
+    valid = (slot_pos <= pos) & (slot_pos >= 0)
+    if window:
+        valid = valid & (slot_pos > pos - window)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)  # (S_cache,)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = _gqa_scores(q, cache_k.astype(q.dtype)) * scale          # (B,Hq,1,Sc)
+    s = s + bias[None, None, None, :]
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = _gqa_out(p, cache_v).astype(x.dtype)                   # (B,1,Hq,hd)
+    out = out.reshape(b, 1, hq * hd) @ params["wo"]
+    return out, cache_k, cache_v
+
+
+def cross_attention_decode(params, cfg: ModelConfig, x, enc_k, enc_v):
+    """Decode-time cross attention over precomputed encoder K/V."""
+    b = x.shape[0]
+    hq, hd = cfg.n_heads, cfg.d_head
+    q = (x @ params["wq"]).reshape(b, 1, hq, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = _gqa_scores(q, enc_k.astype(q.dtype)) * scale
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = _gqa_out(p, enc_v).astype(x.dtype)
+    return out.reshape(b, 1, hq * hd) @ params["wo"]

@@ -1,0 +1,131 @@
+"""Core neural building blocks (pure JAX, functional, explicit param dicts).
+
+Parameter convention: every module is a pair of functions
+  ``init_<mod>(key, cfg, ...) -> params`` and ``<mod>(params, x, ...) -> y``
+with params as (nested) dicts of jnp arrays.  Layer stacks are stored
+*stacked* on a leading ``L`` axis so the forward pass can ``lax.scan`` over
+layers (keeps HLO size flat for 88-layer archs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+
+
+def embed_init(key, vocab: int, d: int):
+    return jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dt)
+
+
+def init_layernorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, d_head); positions: (..., S) int32."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                       # (d_head/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d: int):
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    out = np.zeros((seq, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# MLP / SwiGLU
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":
+        return {
+            "w_gate": dense_init(ks[0], d, f),
+            "w_up": dense_init(ks[1], d, f),
+            "w_down": dense_init(ks[2], f, d),
+        }
+    return {
+        "w_up": dense_init(ks[0], d, f),
+        "w_down": dense_init(ks[1], f, d),
+    }
+
+
+def mlp(params, x, act: str = "silu"):
+    if act == "silu":
+        g = jax.nn.silu(x @ params["w_gate"])
+        u = x @ params["w_up"]
+        return (g * u) @ params["w_down"]
+    h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# stacked-layer helpers
+# ---------------------------------------------------------------------------
+
+def init_stacked(key, n_layers: int, init_one):
+    """Initialize `n_layers` copies of a module, stacked on a leading axis."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)
+
+
+def unembed(params, h):
+    """h: (..., d) -> logits (..., vocab)."""
+    return h @ params["w_unembed"]

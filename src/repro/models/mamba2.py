@@ -1,0 +1,235 @@
+"""Mamba2 (SSD) block in pure JAX: chunked-parallel scan for train/prefill,
+O(1)-state single-token recurrence for decode.
+
+Follows the SSD "minimal" formulation (Dao & Gu 2024): per-head scalar decay
+A, per-token dt, shared (ngroups=1) B/C projections of state size N:
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T        h: (heads, headdim, N)
+    y_t = C_t . h_t + D x_t
+
+The chunked algorithm computes intra-chunk contributions with a quadratic
+(MXU-friendly) einsum and carries inter-chunk states with a short lax.scan —
+the TPU-native adaptation of the paper-era CUDA selective-scan kernels.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+
+class MambaState(NamedTuple):
+    ssm: jnp.ndarray   # (B, nh, hd, N)
+    conv: jnp.ndarray  # (B, k-1, conv_channels)
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_heads
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,)) *
+                 (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    return {
+        "norm_in": init_rmsnorm(d),
+        "w_in": dense_init(ks[0], d, 2 * di + 2 * n + nh),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "D": jnp.ones((nh,)),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),  # inverse softplus
+        "norm": init_rmsnorm(di),
+        "w_out": dense_init(ks[3], di, d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD scan
+# ---------------------------------------------------------------------------
+
+def _segsum(a):
+    """a: (..., L) -> (..., L, L) with out[t, s] = sum_{s < t' <= t} a[t']."""
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    L = a.shape[-1]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, a, B, C, chunk: int, h0=None):
+    """Chunk-parallel SSD.
+
+    x: (b, s, nh, hd)   token inputs (already multiplied by dt)
+    a: (b, s, nh)       log-decay per step (dt * A, negative)
+    B, C: (b, s, n)     shared across heads (ngroups = 1)
+    h0: (b, nh, hd, n)  initial state (decode continuation) or None.
+    Returns y: (b, s, nh, hd), h_final: (b, nh, hd, n).
+    """
+    b, s, nh, hd = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, nh, hd)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+    ac = a.reshape(b, nc, chunk, nh).transpose(0, 3, 1, 2)    # (b,nh,nc,l)
+
+    a_cs = jnp.cumsum(ac, axis=-1)                            # (b,nh,nc,l)
+    L = jnp.exp(_segsum(ac))                                  # (b,nh,nc,l,l)
+
+    # intra-chunk (quadratic, MXU)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, xc)
+
+    # per-chunk end states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)             # (b,nh,nc,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cs[..., -1])                      # (b,nh,nc)
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, n), x.dtype)
+
+    def step(h, inp):
+        st, dec = inp                                         # (b,nh,hd,n),(b,nh)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    (h_final, prev_states) = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (b,nc,nh,hd,n)
+
+    # inter-chunk contribution
+    out_decay = jnp.exp(a_cs)                                 # (b,nh,nc,l)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states, out_decay)
+
+    y = (y_diag + y_off).reshape(b, nc * chunk, nh, hd)
+    return y[:, :s], h_final
+
+
+def ssd_sequential(x, a, B, C, h0=None):
+    """Step-by-step oracle for tests; same signature as ssd_chunked."""
+    b, s, nh, hd = x.shape
+    n = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, n), x.dtype)
+
+    def step(h, inp):
+        x_t, a_t, B_t, C_t = inp
+        h = h * jnp.exp(a_t)[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", x_t, B_t)
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, (x.transpose(1, 0, 2, 3),
+                                    a.transpose(1, 0, 2),
+                                    B.transpose(1, 0, 2),
+                                    C.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3), h
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def causal_conv(x, w, b):
+    """x: (B, S, C), w: (K, C) depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.transpose(0, 2, 1)[:, :, None, :],          # NCHW (B, C, 1, S+k-1)
+        w.T[:, None, None, :],                          # OIHW (C, 1, 1, K)
+        window_strides=(1, 1), padding="VALID",
+        feature_group_count=x.shape[-1])
+    return out[:, :, 0, :].transpose(0, 2, 1) + b       # (B, S, C)
+
+
+def causal_conv_step(state, x_t, w, b):
+    """state: (B, K-1, C) previous inputs; x_t: (B, 1, C)."""
+    window = jnp.concatenate([state, x_t], axis=1)      # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return window[:, 1:], y[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, proj):
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def mamba2_block(params, cfg: ModelConfig, u, state: MambaState | None = None,
+                 *, decode: bool = False):
+    """u: (B, S, d_model) -> (B, S, d_model), new_state.
+
+    decode=True requires S == 1 and a state.
+    """
+    b, s, d = u.shape
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    u = rmsnorm(params["norm_in"], u, cfg.norm_eps)
+    proj = u @ params["w_in"]
+    z, xbc, dt = _split_proj(cfg, proj)
+
+    if decode:
+        conv_state, y_conv = causal_conv_step(state.conv, xbc,
+                                              params["conv_w"],
+                                              params["conv_b"])
+    else:
+        y_conv = causal_conv(xbc, params["conv_w"], params["conv_b"])
+        conv_state = None
+        if state is not None:
+            raise ValueError("prefill with prior state not supported")
+
+    y_conv = jax.nn.silu(y_conv)
+    x_in = y_conv[..., :di].reshape(b, s, nh, hd)
+    B_in = y_conv[..., di:di + n]
+    C_in = y_conv[..., di + n:]
+
+    A = -jnp.exp(params["A_log"])                            # (nh,)
+    dt_s = jax.nn.softplus(dt + params["dt_bias"])           # (b,s,nh)
+    a = dt_s * A                                             # log decay
+    x_dt = x_in * dt_s[..., None]
+
+    if decode:
+        h = state.ssm * jnp.exp(a[:, 0])[..., None, None]
+        h = h + jnp.einsum("bhp,bn->bhpn", x_dt[:, 0], B_in[:, 0])
+        y = jnp.einsum("bhpn,bn->bhp", h, C_in[:, 0])[:, None]
+        h_final = h
+    else:
+        y, h_final = ssd_chunked(x_dt, a, B_in, C_in, cfg.ssm_chunk)
+
+    y = y + x_in * params["D"][None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["w_out"]
+
+    if decode:
+        new_state = MambaState(ssm=h_final, conv=conv_state)
+    else:
+        k = cfg.ssm_conv
+        conv_tail = jnp.pad(xbc, ((0, 0), (max(0, k - 1 - s), 0), (0, 0)))
+        new_state = MambaState(ssm=h_final, conv=conv_tail[:, -(k - 1):])
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return MambaState(
+        ssm=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                      dtype),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                       dtype),
+    )

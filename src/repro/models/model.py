@@ -1,0 +1,474 @@
+"""Unified model API across the six architecture families.
+
+``Model(cfg)`` exposes:
+
+  init(key)                          -> params (pytree)
+  forward(params, batch)             -> (logits, aux, last_hidden)
+  loss(params, batch)                -> (scalar, metrics)   [weighted CE]
+  init_decode_state(batch, seq_len)  -> decode state (KV caches / SSM states)
+  decode_step(params, state, token, pos) -> (logits, new state)
+  input_specs(shape)                 -> jax.ShapeDtypeStruct stand-ins
+
+Large stacks store per-layer params *stacked* on a leading axis and scan over
+them; small/heterogeneous stacks (whisper, xlstm) use python loops.
+
+Batch format (all int32 unless noted):
+  tokens  (B, S)           labels (B, S)  (-100 = masked)
+  weights (B,) float32     optional per-example coreset weights (FedCore δ/m)
+  encoder_embeddings (B, S_enc, d) float  [audio family stub frontend]
+  patch_embeddings   (B, P, d) float      [vlm family stub frontend]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention as attn
+from repro.models import mamba2, moe, xlstm
+from repro.models.layers import (dense_init, embed_init, init_mlp,
+                                 init_rmsnorm, init_stacked, mlp, rmsnorm,
+                                 sinusoidal_pos)
+
+IGNORE = -100
+
+
+# ---------------------------------------------------------------------------
+# transformer layer (dense or moe)
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": init_rmsnorm(cfg.d_model),
+        "attn": attn.init_attention(ks[0], cfg),
+        "ln2": init_rmsnorm(cfg.d_model),
+    }
+    if cfg.n_experts > 0:
+        p["moe"] = moe.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    if cross:
+        p["ln_x"] = init_rmsnorm(cfg.d_model)
+        p["xattn"] = attn.init_attention(ks[2], cfg, cross=True)
+    return p
+
+
+def _layer_fwd(p, cfg: ModelConfig, x, positions, *, causal=True,
+               window=None, impl="chunked", use_rope=True,
+               enc=None, enc_positions=None):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    x = x + attn.multihead_attention(p["attn"], cfg, h, positions,
+                                     causal=causal, window=window, impl=impl,
+                                     use_rope=use_rope)
+    if enc is not None:
+        h = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        x = x + attn.multihead_attention(
+            p["xattn"], cfg, h, positions, causal=False, impl=impl,
+            kv_x=enc, kv_positions=enc_positions, use_rope=False)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.n_experts > 0:
+        y, aux = moe.moe_ffn(p["moe"], cfg, h)
+    else:
+        y, aux = mlp(p["mlp"], h, cfg.act), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def _layer_decode(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
+                  window=None, use_rope=True, enc_k=None, enc_v=None):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    y, cache_k, cache_v = attn.attention_decode(
+        p["attn"], cfg, h, cache_k, cache_v, pos, window=window,
+        use_rope=use_rope)
+    x = x + y
+    if enc_k is not None:
+        h = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        x = x + attn.cross_attention_decode(p["xattn"], cfg, h, enc_k, enc_v)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.n_experts > 0:
+        y, _ = moe.moe_ffn(p["moe"], cfg, h)
+    else:
+        y = mlp(p["mlp"], h, cfg.act)
+    return x + y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.family not in ("dense", "moe", "vlm", "audio", "ssm", "hybrid",
+                              "xlstm"):
+            raise ValueError(f"unknown family {cfg.family}")
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        params: Dict[str, Any] = {
+            "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+            "ln_f": init_rmsnorm(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["w_unembed"] = dense_init(ks[1], cfg.d_model,
+                                             cfg.vocab_size, scale=0.02)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            params["layers"] = init_stacked(
+                ks[2], cfg.n_layers, lambda k: _init_layer(k, cfg))
+        elif cfg.family == "audio":
+            enc_cfg = cfg.with_(act="gelu")
+            params["enc_layers"] = [
+                _init_layer(k, enc_cfg)
+                for k in jax.random.split(ks[3], cfg.enc_layers)]
+            params["enc_ln"] = init_rmsnorm(cfg.d_model)
+            params["dec_layers"] = [
+                _init_layer(k, cfg, cross=True)
+                for k in jax.random.split(ks[2], cfg.n_layers)]
+        elif cfg.family in ("ssm", "hybrid"):
+            params["layers"] = init_stacked(
+                ks[2], cfg.n_layers, lambda k: mamba2.init_mamba2(k, cfg))
+            if cfg.family == "hybrid" and cfg.attn_every:
+                params["shared_attn"] = _init_layer(ks[4], cfg)
+                params["shared_in"] = dense_init(ks[5], 2 * cfg.d_model,
+                                                 cfg.d_model)
+        elif cfg.family == "xlstm":
+            blocks = []
+            for ch, k in zip(cfg.xlstm_pattern,
+                             jax.random.split(ks[2], len(cfg.xlstm_pattern))):
+                if ch == "m":
+                    blocks.append(xlstm.init_mlstm(k, cfg))
+                else:
+                    blocks.append(xlstm.init_slstm(k, cfg))
+            params["blocks"] = blocks
+        return params
+
+    def _unembed(self, params, h):
+        w = (params["embed"].T if self.cfg.tie_embeddings
+             else params["w_unembed"])
+        return (h @ w.astype(h.dtype)).astype(jnp.float32)
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, batch, *, impl: str = "chunked"):
+        """Returns (logits (B,S,V) fp32, aux scalar, last_hidden (B,S,d))."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = params["embed"][tokens]
+        prefix = 0
+
+        if cfg.family == "vlm":
+            patches = batch["patch_embeddings"].astype(x.dtype)
+            prefix = patches.shape[1]
+            x = jnp.concatenate([patches, x], axis=1)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        aux = jnp.zeros((), jnp.float32)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            def body(h, layer_p):
+                h, a = _layer_fwd(layer_p, cfg, h, positions,
+                                  window=cfg.attention_window, impl=impl)
+                return h, a
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, auxs = jax.lax.scan(body, x, params["layers"])
+            aux = jnp.sum(auxs)
+        elif cfg.family == "audio":
+            enc = batch["encoder_embeddings"].astype(x.dtype)
+            enc = enc + sinusoidal_pos(enc.shape[1], cfg.d_model)
+            enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+            enc_cfg = cfg.with_(act="gelu")
+            for p in params["enc_layers"]:
+                enc, _ = _layer_fwd(p, enc_cfg, enc, enc_pos, causal=False,
+                                    impl=impl, use_rope=False)
+            enc = rmsnorm(params["enc_ln"], enc, cfg.norm_eps)
+            x = x + sinusoidal_pos(s, cfg.d_model)
+            for p in params["dec_layers"]:
+                x, _ = _layer_fwd(p, cfg, x, positions,
+                                  window=cfg.attention_window, impl=impl,
+                                  use_rope=False, enc=enc,
+                                  enc_positions=enc_pos)
+        elif cfg.family in ("ssm", "hybrid"):
+            x = self._ssm_forward(params, x, positions, impl)
+        elif cfg.family == "xlstm":
+            for p, ch in zip(params["blocks"], cfg.xlstm_pattern):
+                blk = xlstm.mlstm_block if ch == "m" else xlstm.slstm_block
+                x, _ = blk(p, cfg, x)
+
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        if prefix:
+            x = x[:, prefix:]
+        logits = self._unembed(params, x)
+        return logits, aux, x
+
+    def _ssm_forward(self, params, x, positions, impl):
+        cfg = self.cfg
+        emb = x
+        if cfg.family == "hybrid" and cfg.attn_every:
+            group = cfg.attn_every
+            n_groups = cfg.n_layers // group
+            tail = cfg.n_layers - n_groups * group
+            stacked = params["layers"]
+            head = jax.tree.map(
+                lambda a: a[: n_groups * group].reshape(
+                    (n_groups, group) + a.shape[1:]), stacked)
+
+            def group_body(h, gp):
+                def layer_body(hh, lp):
+                    y, _ = mamba2.mamba2_block(lp, cfg, hh)
+                    return hh + y, None
+                h, _ = jax.lax.scan(layer_body, h, gp)
+                # shared attention block with embedding skip (zamba2 concat)
+                zin = jnp.concatenate([h, emb], axis=-1) @ params["shared_in"]
+                y, _ = _layer_fwd(params["shared_attn"], cfg, zin, positions,
+                                  window=cfg.attention_window, impl=impl)
+                return h + y, None
+
+            x, _ = jax.lax.scan(group_body, x, head)
+            if tail:
+                tail_p = jax.tree.map(lambda a: a[n_groups * group:], stacked)
+
+                def layer_body(hh, lp):
+                    y, _ = mamba2.mamba2_block(lp, cfg, hh)
+                    return hh + y, None
+                x, _ = jax.lax.scan(layer_body, x, tail_p)
+        else:
+            def layer_body(hh, lp):
+                y, _ = mamba2.mamba2_block(lp, cfg, hh)
+                return hh + y, None
+            if cfg.remat:
+                layer_body = jax.checkpoint(layer_body)
+            x, _ = jax.lax.scan(layer_body, x, params["layers"])
+        return x
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch, *, impl: str = "chunked"):
+        """Weighted next-token CE.  Returns (scalar, metrics dict)."""
+        cfg = self.cfg
+        logits, aux, _ = self.forward(params, batch, impl=impl)
+        labels = batch["labels"]
+        valid = (labels != IGNORE)
+        safe = jnp.where(valid, labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        nll = nll * valid
+        per_example = jnp.sum(nll, axis=-1) / jnp.maximum(
+            jnp.sum(valid, axis=-1), 1)
+        w = batch.get("weights")
+        if w is None:
+            w = jnp.ones_like(per_example)
+        total = jnp.sum(per_example * w) / jnp.maximum(jnp.sum(w), 1e-9)
+        loss = total + cfg.router_aux_coef * aux
+        metrics = {"loss": total, "aux": aux,
+                   "per_example_loss": per_example}
+        return loss, metrics
+
+    # -------------------------------------------------------- decode state
+    def init_decode_state(self, params, batch: int, seq_len: int,
+                          dtype=jnp.bfloat16, enc_embeddings=None):
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            return {"kv": attn.init_kv_cache(cfg, cfg.n_layers, batch,
+                                             seq_len, dtype)}
+        if cfg.family == "audio":
+            st = {"kv": attn.init_kv_cache(cfg, cfg.n_layers, batch, seq_len,
+                                           dtype)}
+            # precompute encoder K/V for cross attention
+            if enc_embeddings is None:
+                s_enc = max(1, int(seq_len * cfg.enc_seq_frac))
+                enc = jnp.zeros((batch, min(s_enc, 4096), cfg.d_model), dtype)
+            else:
+                enc = enc_embeddings
+            enc = enc + sinusoidal_pos(enc.shape[1], cfg.d_model).astype(dtype)
+            enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+            enc_cfg = cfg.with_(act="gelu")
+            h = enc
+            for p in params["enc_layers"]:
+                h, _ = _layer_fwd(p, enc_cfg, h, enc_pos, causal=False,
+                                  use_rope=False)
+            h = rmsnorm(params["enc_ln"], h, cfg.norm_eps)
+            eks, evs = [], []
+            for p in params["dec_layers"]:
+                hk, hd_ = cfg.n_kv_heads, cfg.d_head
+                eks.append((h @ p["xattn"]["wk"].astype(h.dtype)).reshape(
+                    batch, -1, hk, hd_))
+                evs.append((h @ p["xattn"]["wv"].astype(h.dtype)).reshape(
+                    batch, -1, hk, hd_))
+            st["enc_k"] = jnp.stack(eks)
+            st["enc_v"] = jnp.stack(evs)
+            return st
+        if cfg.family in ("ssm", "hybrid"):
+            st = {"mamba": mamba2.init_mamba_state(cfg, batch, dtype)}
+            st["mamba"] = mamba2.MambaState(
+                ssm=jnp.zeros((cfg.n_layers,) + st["mamba"].ssm.shape, dtype),
+                conv=jnp.zeros((cfg.n_layers,) + st["mamba"].conv.shape,
+                               dtype))
+            if cfg.family == "hybrid" and cfg.attn_every:
+                n_groups = cfg.n_layers // cfg.attn_every
+                st["kv"] = attn.init_kv_cache(cfg, n_groups, batch, seq_len,
+                                              dtype)
+            return st
+        if cfg.family == "xlstm":
+            sts = []
+            for ch in cfg.xlstm_pattern:
+                if ch == "m":
+                    sts.append(xlstm.init_mlstm_state(cfg, batch, dtype))
+                else:
+                    sts.append(xlstm.init_slstm_state(cfg, batch, dtype))
+            return {"blocks": sts}
+        raise ValueError(cfg.family)
+
+    # ---------------------------------------------------------- decode step
+    def decode_step(self, params, state, token, pos):
+        """token: (B, 1) int32; pos: scalar int32 -> (logits (B,1,V), state)."""
+        cfg = self.cfg
+        x = params["embed"][token]
+        w = cfg.attention_window
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            kv = state["kv"]
+
+            def body(carry, inp):
+                h = carry
+                layer_p, ck, cv = inp
+                h, ck, cv = _layer_decode(layer_p, cfg, h, ck, cv, pos,
+                                          window=w)
+                return h, (ck, cv)
+
+            x, (nk, nv) = jax.lax.scan(body, x,
+                                       (params["layers"], kv["k"], kv["v"]))
+            state = {"kv": {"k": nk, "v": nv}}
+        elif cfg.family == "audio":
+            kv = state["kv"]
+            x = x + _sin_pos_at(pos, cfg.d_model).astype(x.dtype)
+            nks, nvs = [], []
+            for i, p in enumerate(params["dec_layers"]):
+                h, ck, cv = _layer_decode(
+                    p, cfg, x, kv["k"][i], kv["v"][i], pos, window=w,
+                    use_rope=False, enc_k=state["enc_k"][i],
+                    enc_v=state["enc_v"][i])
+                x = h
+                nks.append(ck)
+                nvs.append(cv)
+            state = dict(state)
+            state["kv"] = {"k": jnp.stack(nks), "v": jnp.stack(nvs)}
+        elif cfg.family in ("ssm", "hybrid"):
+            x, state = self._ssm_decode(params, state, x, pos)
+        elif cfg.family == "xlstm":
+            sts = []
+            for p, ch, st in zip(params["blocks"], cfg.xlstm_pattern,
+                                 state["blocks"]):
+                blk = xlstm.mlstm_block if ch == "m" else xlstm.slstm_block
+                x, st = blk(p, cfg, x, st, decode=True)
+                sts.append(st)
+            state = {"blocks": sts}
+
+        h = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        return self._unembed(params, h), state
+
+    def _ssm_decode(self, params, state, x, pos):
+        cfg = self.cfg
+        mst = state["mamba"]
+        emb = x
+        if cfg.family == "hybrid" and cfg.attn_every:
+            group = cfg.attn_every
+            n_groups = cfg.n_layers // group
+            tail = cfg.n_layers - n_groups * group
+            kv = state["kv"]
+            new_ssm, new_conv = [], []
+            nk, nv = [], []
+            li = 0
+            for g in range(n_groups):
+                for _ in range(group):
+                    lp = jax.tree.map(lambda a: a[li], params["layers"])
+                    st = mamba2.MambaState(mst.ssm[li], mst.conv[li])
+                    y, st = mamba2.mamba2_block(lp, cfg, x, st, decode=True)
+                    x = x + y
+                    new_ssm.append(st.ssm)
+                    new_conv.append(st.conv)
+                    li += 1
+                zin = jnp.concatenate([x, emb], axis=-1) @ params["shared_in"]
+                y, ck, cv = _layer_decode(params["shared_attn"], cfg, zin,
+                                          kv["k"][g], kv["v"][g], pos,
+                                          window=cfg.attention_window)
+                x = x + y
+                nk.append(ck)
+                nv.append(cv)
+            for _ in range(tail):
+                lp = jax.tree.map(lambda a: a[li], params["layers"])
+                st = mamba2.MambaState(mst.ssm[li], mst.conv[li])
+                y, st = mamba2.mamba2_block(lp, cfg, x, st, decode=True)
+                x = x + y
+                new_ssm.append(st.ssm)
+                new_conv.append(st.conv)
+                li += 1
+            state = {
+                "mamba": mamba2.MambaState(jnp.stack(new_ssm),
+                                           jnp.stack(new_conv)),
+                "kv": {"k": jnp.stack(nk), "v": jnp.stack(nv)},
+            }
+        else:
+            def body(carry, inp):
+                h = carry
+                lp, ssm_s, conv_s = inp
+                y, st = mamba2.mamba2_block(
+                    lp, cfg, h, mamba2.MambaState(ssm_s, conv_s), decode=True)
+                return h + y, (st.ssm, st.conv)
+
+            x, (ns, nc) = jax.lax.scan(body, x,
+                                       (params["layers"], mst.ssm, mst.conv))
+            state = {"mamba": mamba2.MambaState(ns, nc)}
+        return x, state
+
+    # ------------------------------------------------------------ input specs
+    def input_specs(self, shape: ShapeConfig, dtype=jnp.bfloat16):
+        """ShapeDtypeStruct stand-ins for every model input of this family."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, self._text_len(s)), i32),
+                "labels": jax.ShapeDtypeStruct((b, self._text_len(s)), i32),
+            }
+            if shape.kind == "train":
+                specs["weights"] = jax.ShapeDtypeStruct((b,), jnp.float32)
+            if cfg.family == "audio":
+                specs["encoder_embeddings"] = jax.ShapeDtypeStruct(
+                    (b, s - self._text_len(s), cfg.d_model), dtype)
+            if cfg.family == "vlm":
+                specs["patch_embeddings"] = jax.ShapeDtypeStruct(
+                    (b, self._n_patches(s), cfg.d_model), dtype)
+            return specs
+        # decode: one token + position
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+    def _text_len(self, s: int) -> int:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return s - int(s * cfg.enc_seq_frac)
+        if cfg.family == "vlm":
+            return s - self._n_patches(s)
+        return s
+
+    def _n_patches(self, s: int) -> int:
+        return min(max(self.cfg.n_patches, 1), s // 4)
+
+
+def _sin_pos_at(pos, d: int):
+    """Sinusoidal positional embedding for a single (traced) position."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) if hasattr(pos, "astype") else float(pos)
+    ang = ang / jnp.power(10000.0, 2 * i / d)
+    out = jnp.zeros((d,), jnp.float32)
+    out = out.at[0::2].set(jnp.sin(ang))
+    out = out.at[1::2].set(jnp.cos(ang))
+    return out

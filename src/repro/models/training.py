@@ -1,0 +1,94 @@
+"""Generic (jit-able) train/eval step factories.
+
+Works for both the paper's small FL models and the large ``Model`` family —
+anything exposing ``loss(params, batch) -> (scalar, metrics)``.
+
+FedProx support: ``prox_mu > 0`` adds (mu/2)||w - w_ref||² against the
+round-start global model (passed as ``prox_ref`` to the step).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+from repro.utils.tree import tree_add
+
+
+def prox_term(params, ref):
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda a, b: jnp.sum(jnp.square(a - b)), params, ref))
+    return sum(leaves)
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer, *,
+                    prox_mu: float = 0.0, clip_norm: Optional[float] = None,
+                    accum_steps: int = 1, donate: bool = True):
+    """loss_fn(params, batch) -> (scalar, metrics).
+
+    ``accum_steps > 1`` enables gradient accumulation (microbatching): the
+    batch's leading dim is split into `accum_steps` microbatches whose
+    gradients are averaged in a lax.scan before the single optimizer
+    update — the §Perf H1 production fix for activation memory (peak
+    activations shrink by ~accum_steps at unchanged math).
+    """
+
+    def grads_of(params, batch, prox_ref):
+        def total_loss(p):
+            loss, metrics = loss_fn(p, batch)
+            if prox_mu and prox_ref is not None:
+                loss = loss + 0.5 * prox_mu * prox_term(p, prox_ref)
+            return loss, metrics
+        return jax.value_and_grad(total_loss, has_aux=True)(params)
+
+    def step(params, opt_state, batch, prox_ref=None):
+        if accum_steps > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                (loss, metrics), g = grads_of(params, mb, prox_ref)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + loss), metrics
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (gsum, loss_sum), metrics = jax.lax.scan(
+                body, (zeros, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = loss_sum / accum_steps
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = grads_of(params, batch, prox_ref)
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            metrics = dict(metrics, grad_norm=gnorm)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = tree_add(params, updates)
+        metrics = dict(metrics, total_loss=loss)
+        return params, opt_state, metrics
+
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(step, donate_argnums=donate_argnums)
+
+
+def make_eval_step(loss_fn: Callable):
+    @jax.jit
+    def step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+    return step
+
+
+def make_grad_fn(loss_fn: Callable):
+    """Full-batch gradient (used by the ε-coreset audit)."""
+    @jax.jit
+    def grad_fn(params, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+    return grad_fn

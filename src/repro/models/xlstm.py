@@ -1,0 +1,173 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): sLSTM and mLSTM cells.
+
+Both cells use exponential gating with a log-domain stabilizer state m.
+Train/prefill run the recurrence with a single ``lax.scan`` over time (one
+while-loop in HLO — compile-size friendly); decode is the same cell applied
+to one step.  State is O(1) per token, so xLSTM runs ``long_500k`` natively.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray  # (B, H, hd, hd)
+    n: jnp.ndarray  # (B, H, hd)
+    m: jnp.ndarray  # (B, H)
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, H, hd)
+    n: jnp.ndarray  # (B, H, hd)
+    h: jnp.ndarray  # (B, H, hd)
+    m: jnp.ndarray  # (B, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": init_rmsnorm(d),
+        "wq": dense_init(ks[0], d, d),
+        "wk": dense_init(ks[1], d, d),
+        "wv": dense_init(ks[2], d, d),
+        "wi": dense_init(ks[3], d, h, scale=0.02),
+        "wf": dense_init(ks[4], d, h, scale=0.02),
+        "bf": jnp.full((h,), 3.0),  # forget-bias init keeps early memory
+        "bi": jnp.zeros((h,)),
+        "wo_gate": dense_init(ks[5], d, d),
+        "w_out": dense_init(ks[6], d, d),
+    }
+
+
+def _mlstm_cell(state: MLSTMState, q, k, v, i_pre, f_pre):
+    """One step.  q/k/v: (B,H,hd); i_pre/f_pre: (B,H)."""
+    C, n, m = state
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    f_act = jnp.exp(log_f + m - m_new)          # (B,H)
+    i_act = jnp.exp(i_pre - m_new)
+    C_new = C * f_act[..., None, None] + i_act[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", v, k)
+    n_new = n * f_act[..., None] + i_act[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)),
+                        jnp.exp(-m_new))
+    h_t = jnp.einsum("bhde,bhe->bhd", C_new, q) / denom[..., None]
+    return MLSTMState(C_new, n_new, m_new), h_t
+
+
+def mlstm_block(params, cfg: ModelConfig, x, state: MLSTMState | None = None,
+                *, decode: bool = False):
+    """x: (B, S, d) -> (B, S, d), new state."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, d // cfg.n_heads
+    xn = rmsnorm(params["norm"], x, cfg.norm_eps)
+    q = (xn @ params["wq"]).reshape(b, s, h, hd) / jnp.sqrt(hd)
+    k = (xn @ params["wk"]).reshape(b, s, h, hd) / jnp.sqrt(hd)
+    v = (xn @ params["wv"]).reshape(b, s, h, hd)
+    i_pre = xn @ params["wi"] + params["bi"]
+    f_pre = xn @ params["wf"] + params["bf"]
+    if state is None:
+        state = init_mlstm_state(cfg, b, x.dtype)
+
+    if decode:
+        state, h_t = _mlstm_cell(state, q[:, 0], k[:, 0], v[:, 0],
+                                 i_pre[:, 0], f_pre[:, 0])
+        hs = h_t[:, None]
+    else:
+        def step(st, inp):
+            return _mlstm_cell(st, *inp)
+        state, hs = jax.lax.scan(
+            step, state,
+            (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+             v.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+             f_pre.transpose(1, 0, 2)))
+        hs = hs.transpose(1, 0, 2, 3)
+    o = jax.nn.sigmoid(xn @ params["wo_gate"])
+    out = (hs.reshape(b, s, d) * o) @ params["w_out"]
+    return x + out, state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    return MLSTMState(
+        C=jnp.zeros((batch, h, hd, hd), dtype),
+        n=jnp.zeros((batch, h, hd), dtype),
+        m=jnp.full((batch, h), -1e30, dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": init_rmsnorm(d),
+        # input projections for gates z, i, f, o
+        "w_in": dense_init(ks[0], d, 4 * d),
+        # block-diagonal recurrent weights per head per gate
+        "r": jax.random.normal(ks[1], (4, h, hd, hd)) / jnp.sqrt(hd),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((d,))]),
+        "w_out": dense_init(ks[2], d, d),
+        "out_norm": init_rmsnorm(d),
+    }
+
+
+def _slstm_cell(params, cfg: ModelConfig, state: SLSTMState, x_gates):
+    """x_gates: (B, 4, H, hd) pre-activations from the input projection."""
+    c, n, h_prev, m = state
+    hcat = h_prev  # (B, H, hd)
+    rec = jnp.einsum("ghde,bhe->bghd", params["r"], hcat)  # (B,4,H,hd)
+    pre = x_gates + rec
+    z_pre, i_pre, f_pre, o_pre = (pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3])
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    f_act = jnp.exp(log_f + m - m_new)
+    i_act = jnp.exp(i_pre - m_new)
+    c_new = f_act * c + i_act * z
+    n_new = f_act * n + i_act
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(params, cfg: ModelConfig, x, state: SLSTMState | None = None,
+                *, decode: bool = False):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, d // cfg.n_heads
+    xn = rmsnorm(params["norm"], x, cfg.norm_eps)
+    gates = (xn @ params["w_in"] + params["b"]).reshape(b, s, 4, h, hd)
+    if state is None:
+        state = init_slstm_state(cfg, b, x.dtype)
+    if decode:
+        state, h_t = _slstm_cell(params, cfg, state, gates[:, 0])
+        hs = h_t[:, None]
+    else:
+        def step(st, g):
+            return _slstm_cell(params, cfg, st, g)
+        state, hs = jax.lax.scan(step, state, gates.transpose(1, 0, 2, 3, 4))
+        hs = hs.transpose(1, 0, 2, 3)
+    out = rmsnorm(params["out_norm"], hs.reshape(b, s, d), cfg.norm_eps)
+    return x + out @ params["w_out"], state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, h, hd), dtype)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, h, hd), -1e30, dtype))

@@ -1,0 +1,105 @@
+"""Minimal optimizer library (no optax in this container).
+
+An ``Optimizer`` is an (init, update) pair operating on pytrees:
+
+    opt = adam(3e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = tree_add(params, updates)
+
+Learning rates may be floats or callables step -> lr (schedules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_add, tree_scale
+
+LR = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def _lr_at(lr: LR, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr: LR, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree.map(jnp.zeros_like, params)
+        return state
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"],
+                              grads)
+            if nesterov:
+                upd = jax.tree.map(lambda m, g: -(lr_t) * (momentum * m + g),
+                                   mu, grads)
+            else:
+                upd = tree_scale(mu, -lr_t)
+            return upd, {"step": step + 1, "mu": mu}
+        return tree_scale(grads, -lr_t), {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: LR, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    return _adam_impl(lr, b1, b2, eps, weight_decay=0.0)
+
+
+def adamw(lr: LR, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    return _adam_impl(lr, b1, b2, eps, weight_decay)
+
+
+def _adam_impl(lr: LR, b1, b2, eps, weight_decay) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, state["step"])
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"],
+                         grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p_):
+            u = -(lr_t) * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay and p_ is not None:
+                u = u - lr_t * weight_decay * p_
+            return u
+
+        if weight_decay and params is not None:
+            updates = jax.tree.map(upd, m, v, params)
+        else:
+            updates = jax.tree.map(lambda m_, v_: upd(m_, v_, None), m, v)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    from repro.utils.tree import global_norm
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return tree_scale(grads, scale), norm

@@ -1,0 +1,32 @@
+"""Learning-rate schedules (callables step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def inverse_time_lr(alpha: float, beta: float):
+    """Paper Thm A.7 schedule: eta_t = alpha / (t + beta)."""
+    return lambda step: alpha / (step.astype(jnp.float32) + beta)
+
+
+def cosine_lr(base: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base * (final_frac + (1 - final_frac) * cos)
+    return f
+
+
+def warmup_cosine_lr(base: float, warmup: int, total_steps: int,
+                     final_frac: float = 0.1):
+    cos = cosine_lr(base, max(1, total_steps - warmup), final_frac)
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = base * s / max(1, warmup)
+        return jnp.where(s < warmup, warm, cos(step - warmup))
+    return f

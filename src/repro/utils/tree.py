@@ -1,0 +1,60 @@
+"""Pytree utilities used across the framework (no optax/flax available)."""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: Pytree, s) -> Pytree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_weighted_mean(trees: Sequence[Pytree], weights: Sequence[float]) -> Pytree:
+    """FedAvg-style aggregation: sum_i w_i * tree_i / sum_i w_i."""
+    ws = jnp.asarray(weights, dtype=jnp.float32)
+    ws = ws / jnp.sum(ws)
+
+    def combine(*leaves):
+        out = leaves[0] * ws[0]
+        for i in range(1, len(leaves)):
+            out = out + leaves[i] * ws[i]
+        return out
+
+    return jax.tree.map(combine, *trees)
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def param_count(tree: Pytree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def tree_allclose(a: Pytree, b: Pytree, rtol=1e-5, atol=1e-6) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(x, y, rtol=rtol, atol=atol) for x, y in zip(la, lb))
+
+
+def split_keys(key: jax.Array, n: int):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,49 @@
+"""Checkpoint round-trip + resume tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_checkpoint, load_pytree,
+                              load_server_state, save_pytree,
+                              save_server_state)
+
+
+def _tree():
+    return {"a": {"b": jnp.ones((3, 2)), "c": jnp.arange(4)},
+            "d": [jnp.zeros(2), jnp.full((2, 2), 7.0)]}
+
+
+def test_roundtrip_with_structure(tmp_path):
+    tree = _tree()
+    path = str(tmp_path / "x.npz")
+    save_pytree(path, tree)
+    back = load_pytree(path, like=tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_roundtrip_nested_dict_reconstruction(tmp_path):
+    tree = {"x": {"y": jnp.ones(3)}, "z": jnp.zeros(2)}
+    path = str(tmp_path / "y.npz")
+    save_pytree(path, tree)
+    back = load_pytree(path)
+    np.testing.assert_array_equal(np.asarray(back["x"]["y"]), np.ones(3))
+
+
+def test_server_state_resume(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    for r in (0, 3, 7):
+        save_server_state(d, r, tree, extra={"note": "test"})
+    assert latest_checkpoint(d).endswith("ckpt_000007.npz")
+    params, rnd = load_server_state(d, like=tree)
+    assert rnd == 7
+    assert params is not None
+
+
+def test_load_missing_returns_none(tmp_path):
+    params, rnd = load_server_state(str(tmp_path / "nope"))
+    assert params is None and rnd == -1

@@ -1,0 +1,119 @@
+"""Coreset construction + ε-approximation (Assumption A.3) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coreset import (build_coreset, coreset_batch, coreset_budget,
+                                coreset_epsilon, needs_coreset)
+from repro.core.gradients import grad_features, true_per_sample_grads
+from repro.models.small import LogisticRegression, SmallCNN
+
+
+def test_budget_formula():
+    # b = floor((c*tau - m) / (E-1))  (§4.2)
+    assert coreset_budget(m=100, capability=2.0, deadline=100.0,
+                          epochs=6) == 20
+    assert coreset_budget(m=100, capability=1.0, deadline=500.0,
+                          epochs=5) == 100  # clipped at m
+    assert coreset_budget(m=100, capability=0.1, deadline=10.0,
+                          epochs=5) == 1   # floor at 1
+
+
+def test_needs_coreset():
+    assert not needs_coreset(m=10, capability=1.0, deadline=100.0, epochs=10)
+    assert needs_coreset(m=100, capability=1.0, deadline=10.0, epochs=10)
+
+
+def _logreg_client(seed=0, m=120, d=10, classes=4):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    w = rng.normal(size=(d, classes))
+    y = np.argmax(x @ w, axis=1).astype(np.int32)
+    return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+def test_coreset_weights_sum_to_m():
+    data = _logreg_client()
+    model = LogisticRegression(n_features=10, n_classes=4)
+    params = model.init(jax.random.PRNGKey(0))
+    feats = grad_features(model, params, data)
+    cs = build_coreset(feats, 12)
+    assert int(np.sum(np.asarray(cs.weights))) == 120
+    assert len(np.asarray(cs.indices)) == 12
+
+
+def test_epsilon_decreases_with_budget():
+    """The ε in Assumption A.3, measured on exact per-sample gradients,
+    shrinks as the coreset budget grows (the paper's core premise)."""
+    data = _logreg_client(m=90)
+    model = LogisticRegression(n_features=10, n_classes=4)
+    params = model.init(jax.random.PRNGKey(1))
+    feats = grad_features(model, params, data)
+    grads = true_per_sample_grads(model.loss, params, data)
+    eps = []
+    for b in (3, 10, 30, 90):
+        cs = build_coreset(feats, b)
+        eps.append(float(coreset_epsilon(jnp.asarray(grads), cs)))
+    assert eps[-1] < 1e-6           # full-budget coreset is exact
+    assert eps[0] > eps[2]          # monotone-ish improvement
+    # coreset beats a random subset of the same size on average
+    rng = np.random.default_rng(0)
+    rand_eps = []
+    for _ in range(5):
+        idx = rng.choice(90, size=10, replace=False)
+        approx = grads[idx].sum(0) * (90 / 10)
+        rand_eps.append(np.linalg.norm(grads.sum(0) - approx) / 90)
+    cs10 = build_coreset(feats, 10)
+    assert float(coreset_epsilon(jnp.asarray(grads), cs10)) < np.mean(
+        rand_eps) * 1.5
+
+
+def test_coreset_batch_materialization():
+    data = _logreg_client(m=40)
+    model = LogisticRegression(n_features=10, n_classes=4)
+    params = model.init(jax.random.PRNGKey(0))
+    feats = grad_features(model, params, data)
+    cs = build_coreset(feats, 8)
+    cb = coreset_batch({k: np.asarray(v) for k, v in data.items()}, cs, 40)
+    assert cb["x"].shape == (8, 10)
+    assert cb["weights"].shape == (8,)
+    assert float(np.sum(cb["weights"])) == 40.0
+
+
+def test_last_layer_grad_proxy_correlates_with_true_distance():
+    """§4.3: d̂ (last-layer proxy) should rank pairs like the true gradient
+    distance d (rank correlation well above chance)."""
+    data = _logreg_client(m=40, d=8, classes=3)
+    model = SmallCNN(image_size=8, channels=(4, 8), n_classes=3)
+    rng = np.random.default_rng(0)
+    imgs = rng.normal(size=(40, 8, 8)).astype(np.float32)
+    labels = (imgs.mean(axis=(1, 2)) > 0).astype(np.int32)
+    d2 = {"x": jnp.asarray(imgs), "y": jnp.asarray(labels)}
+    params = model.init(jax.random.PRNGKey(2))
+    feats = np.asarray(grad_features(model, params, d2))
+    grads = true_per_sample_grads(model.loss, params, d2, batch_size=40)
+
+    def pdist(a):
+        return np.linalg.norm(a[:, None] - a[None, :], axis=-1)
+
+    dp = pdist(feats)[np.triu_indices(40, 1)]
+    dt = pdist(grads)[np.triu_indices(40, 1)]
+    rho = np.corrcoef(np.argsort(np.argsort(dp)),
+                      np.argsort(np.argsort(dt)))[0, 1]
+    assert rho > 0.5, f"rank correlation too weak: {rho}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(10, 60), budget=st.integers(2, 10))
+def test_property_coreset_valid(m, budget):
+    rng = np.random.default_rng(m * 100 + budget)
+    feats = jnp.asarray(rng.normal(size=(m, 5)).astype(np.float32))
+    cs = build_coreset(feats, budget)
+    b = min(budget, m)
+    idx = np.asarray(cs.indices)
+    assert len(idx) == b
+    assert len(set(idx.tolist())) == b
+    assert int(np.asarray(cs.weights).sum()) == m
+    assert float(cs.objective) >= -1e-6

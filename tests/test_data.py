@@ -1,0 +1,81 @@
+"""Data-pipeline tests: generator statistics match Table 1, determinism."""
+import numpy as np
+import pytest
+
+from repro.data.batching import batch_iterator, epoch_batches
+from repro.data.charlm import VOCAB, shakespeare_like_dataset
+from repro.data.mnist_like import mnist_like_dataset
+from repro.data.partition import power_law_sizes, train_test_split_clients
+from repro.data.synthetic import synthetic_dataset
+
+
+def test_synthetic_shapes_and_determinism():
+    a = synthetic_dataset(0.5, 0.5, n_clients=5, mean_samples=100,
+                          std_samples=50, seed=7)
+    b = synthetic_dataset(0.5, 0.5, n_clients=5, mean_samples=100,
+                          std_samples=50, seed=7)
+    assert len(a) == 5
+    for ca, cb in zip(a, b):
+        assert ca["x"].shape[1] == 60
+        assert ca["y"].min() >= 0 and ca["y"].max() < 10
+        np.testing.assert_array_equal(ca["x"], cb["x"])
+
+
+def test_synthetic_heterogeneity_increases_with_beta():
+    """Higher β => per-client feature means v_i spread further apart."""
+    def feature_spread(beta):
+        clients = synthetic_dataset(0.0, beta, n_clients=12,
+                                    mean_samples=400, std_samples=10, seed=3)
+        means = np.stack([c["x"].mean(axis=0) for c in clients])
+        return float(np.std(means[:, 0]))
+    assert feature_spread(4.0) > feature_spread(0.0)
+
+
+def test_mnist_like_statistics():
+    clients = mnist_like_dataset(n_clients=50, seed=0)
+    assert len(clients) == 50
+    for c in clients[:10]:
+        assert c["x"].shape[1:] == (28, 28)
+        assert len(np.unique(c["y"])) <= 2  # 2 digits per client
+
+
+def test_shakespeare_like():
+    clients = shakespeare_like_dataset(n_clients=4, mean_samples=50,
+                                       std_samples=20, seq_len=20, seed=0)
+    for c in clients:
+        assert c["x"].shape[1] == 20
+        assert c["x"].max() < VOCAB
+        # next-char alignment: y[t] == x[t+1]
+        np.testing.assert_array_equal(c["x"][0, 1:], c["y"][0, :-1])
+
+
+def test_power_law_sizes_match_target():
+    rng = np.random.default_rng(0)
+    sizes = power_law_sizes(5000, mean=69.0, std=106.0, rng=rng)
+    assert abs(sizes.mean() - 69) / 69 < 0.25
+    assert sizes.min() >= 8
+
+
+def test_train_test_split():
+    clients = synthetic_dataset(0, 0, n_clients=3, mean_samples=100,
+                                std_samples=10, seed=0)
+    train, test = train_test_split_clients(clients, test_frac=0.2)
+    total_train = sum(len(c["y"]) for c in train)
+    total = sum(len(c["y"]) for c in clients)
+    assert len(test["y"]) + total_train == total
+    assert len(test["y"]) >= 0.15 * total
+
+
+def test_epoch_batches_cover_everything():
+    data = {"x": np.arange(23)[:, None].astype(np.float32),
+            "y": np.arange(23)}
+    rng = np.random.default_rng(0)
+    seen = np.concatenate([b["y"] for b in epoch_batches(data, 8, rng)])
+    assert sorted(seen.tolist()) == list(range(23))
+
+
+def test_batch_iterator_counts_steps():
+    data = {"x": np.zeros((10, 2), np.float32), "y": np.zeros(10, np.int64)}
+    rng = np.random.default_rng(0)
+    batches = list(batch_iterator(data, 4, steps=7, rng=rng))
+    assert len(batches) == 7

@@ -1,0 +1,35 @@
+"""Integration test for the multi-pod dry-run driver: runs one real
+(arch x shape) combination end-to-end in a subprocess (512 forced host
+devices, lower + compile + analyses).  The full 80-combination sweep is the
+deliverable run (results/dryrun_*.jsonl); this guards the machinery."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = __file__.rsplit("/tests/", 1)[0]
+
+
+@pytest.mark.parametrize("args,expect_arch", [
+    (["--arch", "whisper-tiny", "--shape", "decode_32k",
+      "--mesh", "single"], "whisper-tiny"),
+    (["--arch", "yi-9b", "--shape", "prefill_32k", "--mesh", "multi"],
+     "yi-9b"),
+])
+def test_dryrun_single_combination(tmp_path, args, expect_arch):
+    out = str(tmp_path / "rec.jsonl")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args, "--out", out],
+        capture_output=True, text=True, timeout=560,
+        env={**os.environ, "PYTHONPATH": f"{ROOT}/src",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=ROOT)
+    assert res.returncode == 0, res.stderr[-2000:]
+    rec = json.loads(open(out).read().splitlines()[-1])
+    assert rec["ok"], rec
+    assert rec["arch"] == expect_arch
+    assert rec["memory"]["bytes_per_device"] > 0
+    assert rec["cost"].get("flops", 0) > 0
+    assert "total_bytes" in rec["collectives"]

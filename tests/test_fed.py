@@ -1,0 +1,94 @@
+"""Federated runtime tests: strategies, deadlines, aggregation, convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.partition import train_test_split_clients
+from repro.data.synthetic import synthetic_dataset
+from repro.fed.server import FLConfig, run_federated, sample_clients, summarize
+from repro.fed.simulator import (ClientSpec, make_client_specs,
+                                 straggler_deadline, straggler_mask)
+from repro.fed.strategies import (FedAvg, FedAvgDS, FedCore, FedProx,
+                                  LocalTrainer)
+from repro.models.small import LogisticRegression
+from repro.utils.tree import tree_weighted_mean
+
+
+@pytest.fixture(scope="module")
+def small_fl():
+    clients = synthetic_dataset(0.5, 0.5, n_clients=8, mean_samples=100,
+                                std_samples=60, seed=1)
+    train, test = train_test_split_clients(clients)
+    rng = np.random.default_rng(1)
+    specs = make_client_specs([len(d["y"]) for d in train], rng)
+    model = LogisticRegression()
+    cfg = FLConfig(rounds=5, clients_per_round=4, epochs=5, batch_size=8,
+                   lr=0.05, straggler_pct=30.0, seed=1, eval_every=5)
+    return model, train, test, specs, cfg
+
+
+def test_deadline_marks_expected_straggler_fraction():
+    rng = np.random.default_rng(0)
+    specs = make_client_specs(rng.integers(50, 500, size=200), rng)
+    for pct in (10.0, 30.0):
+        tau = straggler_deadline(specs, epochs=10, straggler_pct=pct)
+        frac = straggler_mask(specs, 10, tau).mean()
+        assert abs(frac - pct / 100) < 0.05
+
+
+def test_sampling_proportional_to_size():
+    specs = [ClientSpec(0, 100, 1.0), ClientSpec(1, 900, 1.0)]
+    rng = np.random.default_rng(0)
+    picks = [c for _ in range(500) for c in sample_clients(specs, 2, rng)]
+    frac1 = np.mean([p == 1 for p in picks])
+    assert 0.82 < frac1 < 0.97
+
+
+def test_aggregation_weighted_mean():
+    trees = [{"w": jnp.ones(3)}, {"w": jnp.zeros(3)}]
+    out = tree_weighted_mean(trees, [3.0, 1.0])
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.75)
+
+
+def test_deadline_aware_strategies_respect_tau(small_fl):
+    model, train, test, specs, cfg = small_fl
+    for make in (lambda t: FedAvgDS(t), lambda t: FedCore(t),
+                 lambda t: FedProx(t)):
+        trainer = LocalTrainer(model, cfg.lr, cfg.batch_size,
+                               prox_mu=0.1 if make.__name__ else 0.0)
+        out = run_federated(model, train, specs, make(trainer), cfg)
+        for rec in out["history"]:
+            assert rec.sim_round_time <= out["deadline"] * 1.001, \
+                f"{out['strategy']} exceeded deadline"
+
+
+def test_fedavg_exceeds_deadline(small_fl):
+    model, train, test, specs, cfg = small_fl
+    trainer = LocalTrainer(model, cfg.lr, cfg.batch_size)
+    out = run_federated(model, train, specs, FedAvg(trainer), cfg)
+    times = [r.sim_round_time for r in out["history"]]
+    assert max(times) > out["deadline"]  # oblivious to τ
+
+
+def test_fedcore_uses_coresets_for_stragglers(small_fl):
+    model, train, test, specs, cfg = small_fl
+    trainer = LocalTrainer(model, cfg.lr, cfg.batch_size)
+    out = run_federated(model, train, specs, FedCore(trainer), cfg)
+    assert sum(r.n_coreset for r in out["history"]) > 0
+
+
+def test_fedcore_converges(small_fl):
+    model, train, test, specs, cfg = small_fl
+    trainer = LocalTrainer(model, cfg.lr, cfg.batch_size)
+    out = run_federated(model, train, specs, FedCore(trainer), cfg, test)
+    s = summarize(out["history"], out["deadline"])
+    assert s["final_test_acc"] > 0.5
+    assert s["final_train_loss"] < 1.5
+
+
+def test_fedavg_ds_drops_stragglers(small_fl):
+    model, train, test, specs, cfg = small_fl
+    trainer = LocalTrainer(model, cfg.lr, cfg.batch_size)
+    out = run_federated(model, train, specs, FedAvgDS(trainer), cfg)
+    assert sum(r.n_dropped for r in out["history"]) > 0

@@ -1,0 +1,47 @@
+"""shard_map FedAvg aggregation — validated on 8 forced host devices in a
+subprocess (device count is locked at first jax init, so this test must not
+pollute the main test process)."""
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.distributed.fedavg_mesh import fedavg_allreduce
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+with mesh:
+    n = 4
+    params = {"w": jnp.arange(float(n)).reshape(n, 1) * jnp.ones((n, 3)),
+              "b": jnp.arange(float(n))}
+    params = jax.tree.map(
+        lambda x: jax.device_put(
+            x, NamedSharding(mesh, P(("data",), *([None] * (x.ndim - 1))))),
+        params)
+    weights = jax.device_put(jnp.ones(n),
+                             NamedSharding(mesh, P(("data",))))
+    out = fedavg_allreduce(params, weights, mesh, client_axes=("data",))
+    assert out["w"].shape == (3,)
+    assert np.allclose(np.asarray(out["w"]), 1.5), out["w"]
+    assert np.allclose(float(out["b"]), 1.5)
+    # weighted
+    weights = jax.device_put(jnp.array([1., 1., 1., 5.]),
+                             NamedSharding(mesh, P(("data",))))
+    out = fedavg_allreduce(params, weights, mesh, client_axes=("data",))
+    assert np.allclose(np.asarray(out["w"]), 2.25), out["w"]
+print("OK")
+"""
+
+
+def test_fedavg_mesh_aggregation():
+    res = subprocess.run([sys.executable, "-c", SCRIPT],
+                         capture_output=True, text=True,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "JAX_PLATFORMS": "cpu"},
+                         cwd=__file__.rsplit("/tests/", 1)[0], timeout=300)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "OK" in res.stdout

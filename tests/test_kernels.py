@@ -1,0 +1,127 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# pairwise_l2
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,d", [(128, 128, 128), (256, 128, 512),
+                                   (131, 59, 70), (64, 64, 8), (300, 300, 260)])
+@pytest.mark.parametrize("squared", [True, False])
+def test_pairwise_l2_shapes(m, n, d, squared):
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, d), jnp.float32)
+    y = jax.random.normal(jax.random.PRNGKey(1), (n, d), jnp.float32)
+    out = ops.pairwise_l2(x, y, squared=squared)
+    expected = ref.pairwise_l2_ref(x, y, squared=squared)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_l2_self_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(2), (128, 256)).astype(dtype)
+    out = ops.pairwise_l2(x)
+    expected = ref.pairwise_l2_ref(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_pairwise_l2_self_diag_zero():
+    x = jax.random.normal(jax.random.PRNGKey(3), (96, 40))
+    out = np.asarray(ops.pairwise_l2(x, squared=True))
+    np.testing.assert_allclose(np.diag(out), 0.0, atol=1e-4)
+    np.testing.assert_allclose(out, out.T, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hk,s,hd", [
+    (2, 4, 2, 128, 64), (1, 4, 4, 256, 32), (2, 8, 1, 128, 64),
+    (1, 2, 2, 64, 128),
+])
+def test_flash_attention_gqa(b, hq, hk, s, hd):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, s, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hk, s, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hk, s, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    expected = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 48, 128])
+def test_flash_attention_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, window=window, block_q=32, block_k=32)
+    expected = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64)).astype(dtype)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    expected = ref.flash_attention_ref(q, k, v)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               **_tol(dtype))
+
+
+def test_flash_matches_model_attention_math():
+    """Kernel agrees with the model-layer chunked attention implementation."""
+    from repro.configs.base import ModelConfig
+    from repro.models.attention import _attend_chunked
+    b, hq, hk, s, hd = 1, 4, 2, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hk, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hk, hd), jnp.float32)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    scale = 1.0 / np.sqrt(hd)
+    chunked = _attend_chunked(q, k, v, pos, pos, True, None, scale)
+    kernel = ops.flash_attention(q.transpose(0, 2, 1, 3),
+                                 k.transpose(0, 2, 1, 3),
+                                 v.transpose(0, 2, 1, 3),
+                                 block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(kernel.transpose(0, 2, 1, 3)),
+                               np.asarray(chunked), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 37, 96), (256, 512), (1, 1, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(4), shape).astype(dtype)
+    scale = jax.random.normal(jax.random.PRNGKey(5), (shape[-1],))
+    out = ops.rmsnorm(x, scale)
+    expected = ref.rmsnorm_ref(x, scale)
+    assert out.shape == x.shape and out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               **_tol(dtype))

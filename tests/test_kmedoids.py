@@ -1,0 +1,95 @@
+"""k-medoids solver tests: oracle agreement, invariants, property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kmedoids import (kmedoids_jax, kmedoids_numpy,
+                                 pairwise_sq_dists)
+
+
+def _random_instance(seed, m=80, d=6, k=8, clusters=True):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    if clusters:
+        x[: m // 3] += 4.0
+        x[m // 3: 2 * m // 3] -= 4.0
+    D = np.sqrt(np.maximum(np.asarray(
+        pairwise_sq_dists(jnp.asarray(x))), 0.0))
+    return x, D
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_jax_matches_numpy_objective(seed):
+    _, D = _random_instance(seed)
+    rn = kmedoids_numpy(D, 8)
+    rj = kmedoids_jax(jnp.asarray(D), 8)
+    assert float(rj.objective) <= float(rn.objective) * 1.001 + 1e-5
+
+
+def test_invariants():
+    _, D = _random_instance(0)
+    res = kmedoids_jax(jnp.asarray(D), 10)
+    m = D.shape[0]
+    # medoids are distinct dataset points
+    meds = np.asarray(res.medoids)
+    assert len(set(meds.tolist())) == 10
+    assert meds.min() >= 0 and meds.max() < m
+    # weights sum to m (paper: Σδ = mⁱ)
+    assert int(np.sum(np.asarray(res.weights))) == m
+    # assignment is the argmin over medoids
+    dm = D[:, meds]
+    np.testing.assert_array_equal(np.asarray(res.assignment), dm.argmin(1))
+    # objective matches the assignment
+    np.testing.assert_allclose(float(res.objective),
+                               dm.min(axis=1).sum(), rtol=1e-5)
+
+
+def test_objective_decreases_with_budget():
+    _, D = _random_instance(1, m=60)
+    objs = [float(kmedoids_jax(jnp.asarray(D), k).objective)
+            for k in (2, 4, 8, 16, 32)]
+    assert all(a >= b - 1e-5 for a, b in zip(objs, objs[1:]))
+
+
+def test_k_equals_m_gives_zero_objective():
+    _, D = _random_instance(2, m=24)
+    res = kmedoids_jax(jnp.asarray(D), 24)
+    assert float(res.objective) < 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), m=st.integers(8, 48),
+       k=st.integers(1, 8))
+def test_property_invariants(seed, m, k):
+    k = min(k, m)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, 4)).astype(np.float32)
+    D = np.sqrt(np.maximum(np.asarray(pairwise_sq_dists(jnp.asarray(x))),
+                           0.0))
+    res = kmedoids_jax(jnp.asarray(D), k)
+    meds = np.asarray(res.medoids)
+    assert len(set(meds.tolist())) == k
+    assert int(np.sum(np.asarray(res.weights))) == m
+    # swap solution is no worse than BUILD-only would ever be required:
+    # objective is at least the optimum lower bound 0 and finite
+    assert 0.0 <= float(res.objective) < 1e9
+    # every point's assigned medoid distance <= distance to any medoid
+    dm = D[:, meds]
+    assigned = dm[np.arange(m), np.asarray(res.assignment)]
+    assert np.all(assigned <= dm.min(axis=1) + 1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_medoid_is_own_cluster_member(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(30, 3)).astype(np.float32)
+    D = np.sqrt(np.maximum(np.asarray(pairwise_sq_dists(jnp.asarray(x))),
+                           0.0))
+    res = kmedoids_jax(jnp.asarray(D), 5)
+    meds = np.asarray(res.medoids)
+    assign = np.asarray(res.assignment)
+    for slot, mi in enumerate(meds):
+        assert assign[mi] == slot  # each medoid assigned to itself

@@ -1,0 +1,55 @@
+"""Smoke tests for the train/serve launchers (in-process, tiny presets)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.serve import generate
+from repro.launch.train import (PRESETS, synthetic_stream,
+                                train_centralized, train_fedcore_lm)
+from repro.models.model import Model
+
+
+def test_synthetic_stream_shapes():
+    gen = synthetic_stream(vocab=64, batch=4, seq=16, seed=0)
+    b = next(gen)
+    assert b["tokens"].shape == (4, 16)
+    assert b["labels"].shape == (4, 16)
+    # next-token alignment
+    b2 = next(gen)
+    assert int(b2["tokens"].max()) < 64
+
+
+def test_train_centralized_reduces_loss(tmp_path):
+    cfg = PRESETS["tiny"]
+    out = train_centralized(cfg, steps=12, batch=8, seq=64, lr=1e-3,
+                            ckpt_dir=str(tmp_path), log_every=100, seed=0)
+    assert out["final_loss"] < out["initial_loss"]
+    import os
+    assert any(f.endswith(".npz") for f in os.listdir(tmp_path))
+
+
+def test_train_fedcore_lm_meets_deadline():
+    cfg = PRESETS["tiny"]
+    out = train_fedcore_lm(cfg, rounds=1, steps_per_epoch=3, silos=3,
+                           batch=4, seq=32, lr=1e-3, straggler_pct=34.0,
+                           seed=0)
+    h = out["history"][0]
+    assert h["round_time"] <= h["tau"] * 1.001
+    assert h["coreset_silos"] >= 1
+
+
+def test_generate_prefill_decode_consistency():
+    cfg = PRESETS["tiny"]
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
+                                 cfg.vocab_size)
+    out = generate(model, params, prompts, gen=5, temperature=0.0)
+    assert out.shape == (2, 11)
+    # greedy decode must be deterministic
+    out2 = generate(model, params, prompts, gen=5, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+    # and must agree with the forward-pass argmax for the first new token
+    logits, _, _ = model.forward(params, {"tokens": prompts}, impl="naive")
+    first_greedy = int(jnp.argmax(logits[0, -1]))
+    assert int(out[0, 6]) == first_greedy

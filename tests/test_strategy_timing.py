@@ -1,0 +1,61 @@
+"""Property tests on the strategy timing/work models (hypothesis): the
+deadline guarantees of Alg. 1 over random client populations."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coreset import coreset_budget, needs_coreset
+from repro.fed.simulator import ClientSpec, straggler_deadline
+from repro.fed.strategies import FORWARD_FRAC
+
+
+def _fedcore_work(m, c, tau, E):
+    """Mirror of FedCore.local_update's work model (strategies.py)."""
+    if not needs_coreset(m, c, tau, E):
+        return E * m
+    if c * tau > m and E > 1:
+        b = coreset_budget(m, c, tau, E)
+        w = m + (E - 1) * b
+        if w <= c * tau:
+            return w
+    avail = c * tau - FORWARD_FRAC * m
+    b = max(1, min(int(avail // E), m))
+    ep = max(1, min(E, int(avail // b)))
+    return FORWARD_FRAC * m + ep * b
+
+
+@settings(max_examples=200, deadline=None)
+@given(m=st.integers(8, 5000), c=st.floats(0.05, 3.0),
+       tau_mult=st.floats(0.1, 3.0), E=st.integers(2, 20))
+def test_fedcore_meets_deadline_whenever_feasible(m, c, tau_mult, E):
+    """If the client can afford a forward pass + 1 sample*epoch, FedCore's
+    schedule fits within tau; otherwise it degrades to the minimum
+    feasible work (footnote-2 regime)."""
+    tau = tau_mult * E * m  # deadline relative to unit-capability full work
+    work = _fedcore_work(m, c, tau, E)
+    min_feasible = FORWARD_FRAC * m + 1  # feature pass + one sample
+    if c * tau >= min_feasible + E:  # comfortably feasible
+        assert work <= c * tau + 1e-6, (m, c, tau, E, work)
+    # work is never more than full-set training
+    assert work <= E * m + 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(m=st.integers(8, 5000), c=st.floats(0.3, 3.0), E=st.integers(2, 20))
+def test_fast_clients_do_full_work(m, c, E):
+    tau = E * m / c * 1.01  # just enough for full-set
+    assert not needs_coreset(m, c, tau, E)
+    assert _fedcore_work(m, c, tau, E) == E * m
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000), pct=st.sampled_from([10.0, 30.0]))
+def test_deadline_percentile(seed, pct):
+    rng = np.random.default_rng(seed)
+    specs = [ClientSpec(i, int(m), float(max(c, 0.05)))
+             for i, (m, c) in enumerate(zip(
+                 rng.integers(10, 1000, 200),
+                 rng.normal(1.0, 0.5, 200)))]
+    tau = straggler_deadline(specs, 10, pct)
+    frac_over = np.mean([s.full_round_time(10) > tau for s in specs])
+    assert abs(frac_over - pct / 100) < 0.06

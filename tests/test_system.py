@@ -1,0 +1,87 @@
+"""End-to-end system behaviour: the paper's headline claims on a reduced
+Synthetic benchmark (the qualitative shape of Table 2 / Fig. 3-5).
+
+These are the integration tests for the full stack: data generator ->
+straggler simulator -> strategies (incl. FedCore's feature extraction,
+k-medoids coreset, weighted coreset epochs) -> aggregation -> eval.
+"""
+import numpy as np
+import pytest
+
+from repro.data.partition import train_test_split_clients
+from repro.data.synthetic import synthetic_dataset
+from repro.fed.server import FLConfig, run_federated, summarize
+from repro.fed.simulator import make_client_specs
+from repro.fed.strategies import FedAvg, FedAvgDS, FedCore, FedProx, LocalTrainer
+from repro.models.small import LogisticRegression
+
+
+@pytest.fixture(scope="module")
+def fl_world():
+    clients = synthetic_dataset(1.0, 1.0, n_clients=10, mean_samples=120,
+                                std_samples=100, seed=0)
+    train, test = train_test_split_clients(clients)
+    rng = np.random.default_rng(0)
+    specs = make_client_specs([len(d["y"]) for d in train], rng)
+    model = LogisticRegression()
+    cfg = FLConfig(rounds=8, clients_per_round=5, epochs=5, batch_size=8,
+                   lr=0.05, straggler_pct=30.0, seed=0, eval_every=4)
+    return model, train, test, specs, cfg
+
+
+@pytest.fixture(scope="module")
+def results(fl_world):
+    model, train, test, specs, cfg = fl_world
+    out = {}
+    for name, factory in {
+        "fedavg": lambda: FedAvg(LocalTrainer(model, cfg.lr, cfg.batch_size)),
+        "fedavg_ds": lambda: FedAvgDS(LocalTrainer(model, cfg.lr,
+                                                   cfg.batch_size)),
+        "fedprox": lambda: FedProx(LocalTrainer(model, cfg.lr,
+                                                cfg.batch_size,
+                                                prox_mu=0.1)),
+        "fedcore": lambda: FedCore(LocalTrainer(model, cfg.lr,
+                                                cfg.batch_size)),
+    }.items():
+        out[name] = run_federated(model, train, specs, factory(), cfg, test)
+    return out
+
+
+def test_deadline_aware_methods_meet_deadline(results):
+    for name in ("fedavg_ds", "fedprox", "fedcore"):
+        out = results[name]
+        s = summarize(out["history"], out["deadline"])
+        assert s["max_round_time_normalized"] <= 1.001, name
+
+
+def test_fedavg_exceeds_deadline(results):
+    out = results["fedavg"]
+    s = summarize(out["history"], out["deadline"])
+    assert s["max_round_time_normalized"] > 1.0
+
+
+def test_fedcore_beats_drop_stragglers_accuracy(results):
+    acc_core = summarize(results["fedcore"]["history"],
+                         results["fedcore"]["deadline"])["final_test_acc"]
+    acc_ds = summarize(results["fedavg_ds"]["history"],
+                       results["fedavg_ds"]["deadline"])["final_test_acc"]
+    assert acc_core > acc_ds
+
+
+def test_fedcore_accuracy_close_to_fedavg(results):
+    """Table 2: coreset training does not degrade accuracy materially."""
+    acc_core = summarize(results["fedcore"]["history"],
+                         results["fedcore"]["deadline"])["final_test_acc"]
+    acc_avg = summarize(results["fedavg"]["history"],
+                        results["fedavg"]["deadline"])["final_test_acc"]
+    assert acc_core >= acc_avg - 0.05
+
+
+def test_fedcore_round_time_speedup_vs_fedavg(results):
+    """The headline: FedCore rounds are bounded by τ while FedAvg's are
+    stretched by stragglers."""
+    t_core = summarize(results["fedcore"]["history"],
+                       results["fedcore"]["deadline"])["mean_round_time"]
+    t_avg = summarize(results["fedavg"]["history"],
+                      results["fedavg"]["deadline"])["mean_round_time"]
+    assert t_avg > t_core
