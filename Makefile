@@ -1,0 +1,9 @@
+PY ?= python
+
+.PHONY: test bench-async
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench-async:
+	PYTHONPATH=src $(PY) benchmarks/async_vs_sync.py --mode smoke

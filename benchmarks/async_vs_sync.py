@@ -1,0 +1,209 @@
+"""Async vs sync runtimes: simulated makespan-to-target-loss comparison.
+
+Runs {FedAvg, FedCore} × {sync round loop, async event loop} on the
+Synthetic(0.5, 0.5) and pseudo-MNIST workloads under a straggler-heavy
+client population, and reports for each variant the final accuracy, the
+total simulated makespan, and the *makespan-to-target-loss*: the first
+virtual time at which test loss reaches the sync-FedAvg baseline's final
+loss (× a small tolerance).  The async runs use staleness-discounted
+delayed-gradient aggregation by default (``--aggregator`` switches to
+FedAsync mixing or FedBuff) and a time-varying capability trace, under
+the same *virtual-time* budget as the sync baseline — async wins by
+applying more updates per unit time, not by being handed more work.
+
+  PYTHONPATH=src python benchmarks/async_vs_sync.py            # smoke (CPU)
+  PYTHONPATH=src python benchmarks/async_vs_sync.py --mode full
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.data.mnist_like import mnist_like_dataset
+from repro.data.partition import train_test_split_clients
+from repro.data.synthetic import synthetic_dataset
+from repro.fed.aggregators import DelayedGradient, FedAsync, FedBuff
+from repro.fed.events import AsyncFLConfig, run_federated_async
+from repro.fed.server import FLConfig, run_federated
+from repro.fed.simulator import TraceConfig, make_client_specs
+from repro.fed.strategies import FedAvg, FedCore, LocalTrainer
+from repro.models.small import LogisticRegression, SmallCNN
+
+SCALES = {
+    "smoke": dict(
+        synthetic=dict(n_clients=20, rounds=10, k=4, epochs=5, lr=0.05,
+                       mean_samples=100, std_samples=150),
+        mnist=dict(n_clients=24, rounds=8, k=4, epochs=3, lr=0.03,
+                   mean_samples=60, std_samples=120),
+    ),
+    "full": dict(
+        synthetic=dict(n_clients=30, rounds=40, k=10, epochs=10, lr=0.05,
+                       mean_samples=670, std_samples=1148),
+        mnist=dict(n_clients=100, rounds=30, k=10, epochs=5, lr=0.03,
+                   mean_samples=69, std_samples=106),
+    ),
+}
+
+
+@dataclasses.dataclass
+class Result:
+    name: str
+    final_acc: float
+    final_loss: float
+    makespan: float
+    time_to_target: float = float("nan")
+
+
+def _curve(history) -> Tuple[List[float], List[float]]:
+    """(cumulative virtual time, test loss) at every evaluated record."""
+    times, losses, t = [], [], 0.0
+    for rec in history:
+        t += rec.sim_round_time
+        if not np.isnan(rec.test_loss):
+            times.append(t)
+            losses.append(rec.test_loss)
+    return times, losses
+
+
+def _time_to_target(history, target: float) -> float:
+    for t, loss in zip(*_curve(history)):
+        if loss <= target:
+            return t
+    return float("inf")
+
+
+def _workload(bench: str, p: dict, seed: int):
+    if bench == "synthetic":
+        clients = synthetic_dataset(0.5, 0.5, n_clients=p["n_clients"],
+                                    mean_samples=p["mean_samples"],
+                                    std_samples=p["std_samples"], seed=seed)
+        model = LogisticRegression()
+    else:
+        clients = mnist_like_dataset(n_clients=p["n_clients"],
+                                     mean_samples=p["mean_samples"],
+                                     std_samples=p["std_samples"], seed=seed)
+        model = SmallCNN()
+    train, test = train_test_split_clients(clients, test_frac=0.3)
+    specs = make_client_specs([len(d["y"]) for d in train],
+                              np.random.default_rng(seed))
+    return model, train, test, specs
+
+
+def run_bench(bench: str, p: dict, straggler_pct: float, aggregator: str,
+              seed: int = 0, verbose: bool = False) -> Dict[str, Result]:
+    model, train, test, specs = _workload(bench, p, seed)
+    budget = p["rounds"] * p["k"]
+
+    def sync(strat_cls):
+        cfg = FLConfig(rounds=p["rounds"], clients_per_round=p["k"],
+                       epochs=p["epochs"], batch_size=8, lr=p["lr"],
+                       straggler_pct=straggler_pct, eval_every=1, seed=seed)
+        strat = strat_cls(LocalTrainer(model, cfg.lr, cfg.batch_size))
+        return run_federated(model, train, specs, strat, cfg, test,
+                             verbose=verbose)
+
+    def async_(strat_cls, time_budget):
+        # same virtual-time budget as the sync baseline: async wins by
+        # applying more (staleness-discounted) updates per unit time, not
+        # by being handed more client work
+        cfg = AsyncFLConfig(max_updates=4 * budget,
+                            max_virtual_time=time_budget,
+                            concurrency=p["k"], epochs=p["epochs"],
+                            batch_size=8, lr=p["lr"],
+                            straggler_pct=straggler_pct,
+                            record_every=p["k"], eval_every=1, seed=seed,
+                            trace=TraceConfig(seed=seed))
+        strat = strat_cls(LocalTrainer(model, cfg.lr, cfg.batch_size))
+        agg = {
+            "delayed_grad": lambda: DelayedGradient(server_lr=0.7),
+            "fedasync": lambda: FedAsync(mixing=0.6, staleness_exponent=0.5),
+            "fedbuff": lambda: FedBuff(buffer_size=max(2, p["k"] // 2)),
+        }[aggregator]()
+        return run_federated_async(model, train, specs, strat, cfg,
+                                   aggregator=agg, test_data=test,
+                                   verbose=verbose)
+
+    runs = {"fedavg-sync": sync(FedAvg), "fedcore-sync": sync(FedCore)}
+    time_budget = sum(r.sim_round_time
+                      for r in runs["fedavg-sync"]["history"])
+    runs["fedavg-async"] = async_(FedAvg, time_budget)
+    runs["fedcore-async"] = async_(FedCore, time_budget)
+
+    baseline = runs["fedavg-sync"]["history"]
+    target = float([r.test_loss for r in baseline
+                    if not np.isnan(r.test_loss)][-1]) * 1.05
+
+    results = {}
+    for name, out in runs.items():
+        hist = out["history"]
+        times, losses = _curve(hist)
+        accs = [r.test_acc for r in hist if not np.isnan(r.test_acc)]
+        if not losses:  # run ended before any evaluated record
+            results[name] = Result(name=name, final_acc=float("nan"),
+                                   final_loss=float("nan"), makespan=0.0,
+                                   time_to_target=float("inf"))
+            continue
+        results[name] = Result(
+            name=name, final_acc=accs[-1], final_loss=losses[-1],
+            makespan=times[-1],
+            time_to_target=_time_to_target(hist, target))
+    return results
+
+
+def report(bench: str, results: Dict[str, Result], acc_tol: float) -> bool:
+    base = results["fedavg-sync"]
+    print(f"\n== {bench} (target loss {base.final_loss * 1.05:.4f} "
+          f"= 1.05 x sync-FedAvg final)")
+    print(f"{'variant':16s} {'acc':>7s} {'loss':>8s} {'makespan':>10s} "
+          f"{'t->target':>10s} {'speedup':>8s}")
+    for name, r in results.items():
+        speedup = (base.time_to_target / r.time_to_target
+                   if np.isfinite(r.time_to_target) else float("nan"))
+        print(f"{name:16s} {r.final_acc:7.4f} {r.final_loss:8.4f} "
+              f"{r.makespan:10.1f} {r.time_to_target:10.1f} "
+              f"{speedup:7.2f}x")
+    ok = True
+    for name in ("fedavg-async", "fedcore-async"):
+        r = results[name]
+        faster = r.time_to_target < base.time_to_target
+        close = r.final_acc >= base.final_acc - acc_tol
+        print(f"  [{'PASS' if faster else 'FAIL'}] {name} reaches target "
+              f"faster than sync FedAvg "
+              f"({r.time_to_target:.1f} < {base.time_to_target:.1f})")
+        print(f"  [{'PASS' if close else 'FAIL'}] {name} final acc within "
+              f"{acc_tol:.2f} of sync baseline "
+              f"({r.final_acc:.4f} vs {base.final_acc:.4f})")
+        ok = ok and faster and close
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--bench", default="both",
+                    choices=["synthetic", "mnist", "both"])
+    ap.add_argument("--stragglers", type=float, default=30.0)
+    ap.add_argument("--aggregator", default="delayed_grad",
+                    choices=["delayed_grad", "fedasync", "fedbuff"])
+    ap.add_argument("--acc-tol", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    benches = (["synthetic", "mnist"] if args.bench == "both"
+               else [args.bench])
+    ok = True
+    for bench in benches:
+        p = SCALES[args.mode][bench]
+        results = run_bench(bench, p, args.stragglers, args.aggregator,
+                            seed=args.seed, verbose=args.verbose)
+        ok = report(bench, results, args.acc_tol) and ok
+    print(f"\noverall: {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,12 +1,32 @@
+from repro.fed.aggregators import (  # noqa: F401
+    AGGREGATORS,
+    Aggregator,
+    ClientUpdate,
+    DelayedGradient,
+    FedAsync,
+    FedBuff,
+    SyncWeightedMean,
+    polynomial_staleness,
+    weighted_mean_params,
+)
+from repro.fed.events import (  # noqa: F401
+    AsyncFLConfig,
+    Event,
+    EventQueue,
+    run_federated_async,
+)
 from repro.fed.server import (  # noqa: F401
     FLConfig,
     RoundRecord,
+    make_eval_fn,
     run_federated,
     sample_clients,
     summarize,
 )
 from repro.fed.simulator import (  # noqa: F401
+    CapabilityTrace,
     ClientSpec,
+    TraceConfig,
     make_client_specs,
     sample_capabilities,
     straggler_deadline,

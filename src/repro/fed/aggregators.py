@@ -1,0 +1,201 @@
+"""Pluggable server-side aggregators for the sync and async FL runtimes.
+
+Three families, all operating on whole client parameter trees:
+
+  * ``SyncWeightedMean`` — the classic round-synchronous FedAvg rule
+    w_{r+1} = Σᵢ αᵢ wᵢ / Σᵢ αᵢ with αᵢ = mⁱ (or 1), shared by
+    ``run_federated`` and usable as a semi-sync buffered aggregator.
+  * ``FedBuff`` — buffered asynchronous aggregation (Nguyen et al.,
+    2022): updates accumulate in a size-K buffer; when full, the server
+    mixes the staleness-discounted weighted mean of the buffer into the
+    global model with server learning-rate η.
+  * ``FedAsync`` — fully asynchronous staleness-polynomial mixing (Xie
+    et al., 2019; cf. "Stragglers Are Not Disaster", arXiv 2102.06329):
+    every arriving update is applied immediately as
+    w ← (1 − α_t) w + α_t wᵢ with α_t = α·(1 + staleness)^{−a}.
+
+Aggregators see one ``ClientUpdate`` at a time via ``apply`` and return
+either new global params (the model version advances) or ``None`` (the
+update was buffered).  Staleness is measured in server model versions:
+how many aggregations were applied between the update's dispatch and its
+arrival.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence
+
+from repro.utils.tree import tree_add, tree_scale, tree_sub, tree_weighted_mean
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientUpdate:
+    """One client's contribution as seen by an aggregator."""
+    params: Pytree
+    n_samples: int
+    staleness: int = 0          # server versions elapsed since dispatch
+    base_params: Pytree = None  # global params the client trained from
+
+
+def polynomial_staleness(staleness: int, exponent: float) -> float:
+    """s(t) = (1 + t)^{−a} — the FedAsync polynomial discount."""
+    return float((1.0 + staleness) ** -exponent)
+
+
+def weighted_mean_params(trees: Sequence[Pytree], n_samples: Sequence[int],
+                         weight_by_samples: bool = True) -> Pytree:
+    """FedAvg aggregation: mean of ``trees`` weighted by mⁱ (or uniform)."""
+    if weight_by_samples:
+        weights = [float(n) for n in n_samples]
+    else:
+        weights = [1.0] * len(trees)
+    return tree_weighted_mean(trees, weights)
+
+
+class Aggregator:
+    """Base: consume one update, maybe emit new global params."""
+    name = "base"
+
+    def apply(self, global_params: Pytree, update: ClientUpdate
+              ) -> Optional[Pytree]:
+        raise NotImplementedError
+
+    def reset(self) -> None:
+        """Drop buffered state; called by the engine at the start of a
+        run so a reused aggregator cannot leak updates across runs."""
+
+
+class SyncWeightedMean(Aggregator):
+    """Weighted mean over a fixed cohort of ``round_size`` updates.
+
+    With ``round_size=None`` it is a pure helper for the synchronous
+    server (call ``aggregate`` directly); with a round size it behaves
+    as a semi-synchronous barrier inside the async engine.
+    """
+    name = "sync_mean"
+
+    def __init__(self, weight_by_samples: bool = True,
+                 round_size: Optional[int] = None):
+        self.weight_by_samples = weight_by_samples
+        self.round_size = round_size
+        self._buffer: List[ClientUpdate] = []
+
+    def aggregate(self, trees: Sequence[Pytree], n_samples: Sequence[int]
+                  ) -> Pytree:
+        return weighted_mean_params(trees, n_samples, self.weight_by_samples)
+
+    def apply(self, global_params, update):
+        if self.round_size is None:
+            raise ValueError("SyncWeightedMean needs round_size to be used "
+                             "as a streaming aggregator")
+        self._buffer.append(update)
+        if len(self._buffer) < self.round_size:
+            return None
+        buf, self._buffer = self._buffer, []
+        return self.aggregate([u.params for u in buf],
+                              [u.n_samples for u in buf])
+
+    def reset(self):
+        self._buffer = []
+
+
+class FedAsync(Aggregator):
+    """Immediate staleness-polynomial mixing: one update ⇒ one version."""
+    name = "fedasync"
+
+    def __init__(self, mixing: float = 0.6, staleness_exponent: float = 0.5):
+        if not 0.0 < mixing <= 1.0:
+            raise ValueError(f"mixing must be in (0, 1], got {mixing}")
+        self.mixing = mixing
+        self.staleness_exponent = staleness_exponent
+
+    def alpha(self, staleness: int) -> float:
+        return self.mixing * polynomial_staleness(staleness,
+                                                  self.staleness_exponent)
+
+    def apply(self, global_params, update):
+        a = self.alpha(update.staleness)
+        return tree_weighted_mean([global_params, update.params],
+                                  [1.0 - a, a])
+
+
+class DelayedGradient(Aggregator):
+    """Staleness-discounted delayed *deltas* (arXiv 2102.06329).
+
+    Instead of mixing toward a stale client's absolute params (FedAsync),
+    apply the progress the client actually made from its dispatch
+    snapshot: w ← w + η·(1 + t)^{−a}·(wᵢ − w_dispatch).  Under heavy
+    staleness and client heterogeneity this is far more stable, because a
+    stale worker contributes its local improvement direction rather than
+    dragging the global model back toward an old point.
+    """
+    name = "delayed_grad"
+
+    def __init__(self, server_lr: float = 1.0,
+                 staleness_exponent: float = 0.5):
+        self.server_lr = server_lr
+        self.staleness_exponent = staleness_exponent
+
+    def apply(self, global_params, update):
+        if update.base_params is None:
+            raise ValueError("DelayedGradient needs ClientUpdate.base_params "
+                             "(the dispatch-time global params)")
+        scale = self.server_lr * polynomial_staleness(
+            update.staleness, self.staleness_exponent)
+        delta = tree_sub(update.params, update.base_params)
+        return tree_add(global_params, tree_scale(delta, scale))
+
+
+class FedBuff(Aggregator):
+    """Buffered-K aggregation with per-update staleness discounting.
+
+    Each buffered update carries weight (1+tᵢ)^{−a}, times mⁱ when
+    ``weight_by_samples`` is set (off by default: the async engine
+    already dispatches clients ∝ mⁱ, so weighting the buffer by mⁱ too
+    would double-count size — same rationale as ``FLConfig``); when the
+    buffer holds ``buffer_size`` updates the server applies
+    w ← (1 − η) w + η · weighted_mean(buffer).  A partial buffer left at
+    the end of a run is discarded on the next run's ``reset()``.
+    """
+    name = "fedbuff"
+
+    def __init__(self, buffer_size: int = 10, staleness_exponent: float = 0.5,
+                 server_lr: float = 1.0, weight_by_samples: bool = False):
+        if buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, got {buffer_size}")
+        if not 0.0 < server_lr <= 1.0:
+            raise ValueError(f"server_lr must be in (0, 1], got {server_lr}")
+        self.buffer_size = buffer_size
+        self.staleness_exponent = staleness_exponent
+        self.server_lr = server_lr
+        self.weight_by_samples = weight_by_samples
+        self._buffer: List[ClientUpdate] = []
+
+    def apply(self, global_params, update):
+        self._buffer.append(update)
+        if len(self._buffer) < self.buffer_size:
+            return None
+        buf, self._buffer = self._buffer, []
+        weights = []
+        for u in buf:
+            w = float(u.n_samples) if self.weight_by_samples else 1.0
+            weights.append(w * polynomial_staleness(u.staleness,
+                                                    self.staleness_exponent))
+        mean = tree_weighted_mean([u.params for u in buf], weights)
+        if self.server_lr >= 1.0:
+            return mean
+        return tree_weighted_mean([global_params, mean],
+                                  [1.0 - self.server_lr, self.server_lr])
+
+    def reset(self):
+        self._buffer = []
+
+
+AGGREGATORS = {
+    "sync_mean": SyncWeightedMean,
+    "fedasync": FedAsync,
+    "fedbuff": FedBuff,
+    "delayed_grad": DelayedGradient,
+}

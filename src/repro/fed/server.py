@@ -2,7 +2,9 @@
 
 Implements Alg. 1's outer loop: sample K clients ∝ pⁱ = mⁱ/Σm with
 replacement (Assumption A.6), broadcast (w_r, τ), collect local updates via
-the strategy, aggregate w_{r+1} = (1/K) Σ w_rⁱ.
+the strategy, aggregate w_{r+1} = (1/K) Σ w_rⁱ (Σ mⁱ w_rⁱ / Σ mⁱ with
+``weight_by_samples=True``).  The asynchronous counterpart lives in
+``repro.fed.events``; eval and history records are shared between the two.
 """
 from __future__ import annotations
 
@@ -14,9 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.fed.aggregators import SyncWeightedMean
 from repro.fed.simulator import ClientSpec, straggler_deadline
 from repro.fed.strategies import ClientResult, Strategy
-from repro.utils.tree import tree_weighted_mean
 
 
 @dataclasses.dataclass
@@ -30,6 +32,11 @@ class FLConfig:
     deadline: Optional[float] = None  # τ; None => derived from straggler_pct
     eval_every: int = 1
     seed: int = 0
+    # aggregate ∝ mⁱ. Default False: with clients sampled ∝ mⁱ with
+    # replacement (Assumption A.6) the unbiased Alg. 1 aggregate is the
+    # uniform 1/K mean — weighting by mⁱ again would double-count size.
+    # True is for uniform client sampling or deliberate size weighting.
+    weight_by_samples: bool = False
 
 
 @dataclasses.dataclass
@@ -66,7 +73,8 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
         deadline = straggler_deadline(specs, cfg.epochs, cfg.straggler_pct)
 
     history: List[RoundRecord] = []
-    eval_fn = _make_eval(model, test_data, eval_batch) if test_data else None
+    eval_fn = make_eval_fn(model, test_data, eval_batch) if test_data else None
+    aggregator = SyncWeightedMean(cfg.weight_by_samples)
 
     for r in range(cfg.rounds):
         t0 = time.perf_counter()
@@ -83,8 +91,8 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
                 results.append(res)
 
         if results:
-            params = tree_weighted_mean([r_.params for r_ in results],
-                                        [1.0] * len(results))
+            params = aggregator.aggregate([r_.params for r_ in results],
+                                          [r_.n_samples for r_ in results])
         times = [r_.sim_time for r_ in results]
         # dropped stragglers in FedAvg-DS still busy until τ
         round_time = max(times + ([deadline] if dropped else [0.0]))
@@ -112,7 +120,8 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
     }
 
 
-def _make_eval(model, test_data, eval_batch: int):
+def make_eval_fn(model, test_data, eval_batch: int):
+    """Batched test-set (accuracy, loss) closure shared by sync and async."""
     @jax.jit
     def _acc(params, batch):
         return model.accuracy(params, batch), model.loss(params, batch)[0]
@@ -134,6 +143,11 @@ def _make_eval(model, test_data, eval_batch: int):
 
 
 def summarize(history: List[RoundRecord], deadline: float) -> Dict[str, float]:
+    if not history:     # e.g. async run cut off before its first record
+        return {k: float("nan") for k in (
+            "mean_round_time", "mean_round_time_normalized",
+            "max_round_time_normalized", "final_test_acc", "best_test_acc",
+            "final_train_loss")}
     times = np.array([h.sim_round_time for h in history])
     accs = np.array([h.test_acc for h in history])
     accs = accs[~np.isnan(accs)]

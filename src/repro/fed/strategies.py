@@ -48,9 +48,8 @@ def _pad_batch(batch: Dict[str, np.ndarray], batch_size: int
     out = {}
     for k, v in batch.items():
         out[k] = np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
-    w = out.get("weights", np.ones(batch_size, np.float32)).copy()
-    if "weights" not in batch:
-        w = np.ones(batch_size, np.float32)
+    w = (out["weights"].copy() if "weights" in batch
+         else np.ones(batch_size, np.float32))
     w[m:] = 0.0
     out["weights"] = w.astype(np.float32)
     return out

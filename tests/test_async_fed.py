@@ -1,0 +1,283 @@
+"""Async runtime tests: event queue ordering, aggregator math, staleness
+discounting, determinism (byte-identical event logs / histories), and an
+end-to-end FedCore smoke run."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.partition import train_test_split_clients
+from repro.data.synthetic import synthetic_dataset
+from repro.fed.aggregators import (ClientUpdate, DelayedGradient, FedAsync,
+                                   FedBuff, SyncWeightedMean,
+                                   polynomial_staleness, weighted_mean_params)
+from repro.fed.events import AsyncFLConfig, EventQueue, run_federated_async
+from repro.fed.server import FLConfig, run_federated
+from repro.fed.simulator import (CapabilityTrace, ClientSpec, TraceConfig,
+                                 make_client_specs)
+from repro.fed.strategies import FedAvg, FedAvgDS, FedCore, LocalTrainer
+from repro.models.small import LogisticRegression
+
+
+@pytest.fixture(scope="module")
+def tiny_fl():
+    clients = synthetic_dataset(0.5, 0.5, n_clients=8, mean_samples=80,
+                                std_samples=50, seed=1)
+    train, test = train_test_split_clients(clients)
+    rng = np.random.default_rng(1)
+    specs = make_client_specs([len(d["y"]) for d in train], rng)
+    return LogisticRegression(), train, test, specs
+
+
+def _async_cfg(**kw):
+    base = dict(max_updates=20, concurrency=4, epochs=4, batch_size=8,
+                lr=0.05, straggler_pct=30.0, record_every=5, seed=3,
+                trace=TraceConfig(seed=3))
+    base.update(kw)
+    return AsyncFLConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# event queue
+# ---------------------------------------------------------------------------
+
+def test_event_queue_orders_by_time_then_push_order():
+    q = EventQueue()
+    q.push(5.0, "complete", cid=1, version=0)
+    q.push(1.0, "dispatch", cid=2, version=0)
+    q.push(1.0, "dispatch", cid=3, version=0)  # same time: push order wins
+    order = [(q.pop().cid) for _ in range(3)]
+    assert order == [2, 3, 1]
+    assert len(q) == 0
+
+
+# ---------------------------------------------------------------------------
+# aggregators
+# ---------------------------------------------------------------------------
+
+def test_polynomial_staleness():
+    assert polynomial_staleness(0, 0.5) == 1.0
+    assert polynomial_staleness(3, 0.5) == pytest.approx(0.5)
+    assert polynomial_staleness(7, 1.0) == pytest.approx(1.0 / 8.0)
+
+
+def test_weighted_mean_params_by_samples():
+    trees = [{"w": jnp.ones(3)}, {"w": jnp.zeros(3)}]
+    w = weighted_mean_params(trees, [300, 100], weight_by_samples=True)
+    np.testing.assert_allclose(np.asarray(w["w"]), 0.75)
+    u = weighted_mean_params(trees, [300, 100], weight_by_samples=False)
+    np.testing.assert_allclose(np.asarray(u["w"]), 0.5)
+
+
+def test_fedasync_staleness_discounted_mixing():
+    agg = FedAsync(mixing=0.5, staleness_exponent=1.0)
+    g = {"w": jnp.zeros(2)}
+    upd = {"w": jnp.ones(2)}
+    # staleness 0: alpha = 0.5
+    out = agg.apply(g, ClientUpdate(upd, n_samples=10, staleness=0))
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.5)
+    # staleness 3: alpha = 0.5 * (1+3)^-1 = 0.125
+    out = agg.apply(g, ClientUpdate(upd, n_samples=10, staleness=3))
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.125, rtol=1e-6)
+
+
+def test_delayed_gradient_applies_discounted_delta():
+    agg = DelayedGradient(server_lr=0.5, staleness_exponent=1.0)
+    g = {"w": jnp.full((2,), 10.0)}
+    base = {"w": jnp.zeros(2)}
+    client = {"w": jnp.full((2,), 4.0)}
+    # delta = 4, staleness 1 -> scale = 0.5 * 0.5 = 0.25 -> 10 + 1
+    out = agg.apply(g, ClientUpdate(client, n_samples=5, staleness=1,
+                                    base_params=base))
+    np.testing.assert_allclose(np.asarray(out["w"]), 11.0)
+
+
+def test_delayed_gradient_requires_base_params():
+    agg = DelayedGradient()
+    with pytest.raises(ValueError):
+        agg.apply({"w": jnp.zeros(1)},
+                  ClientUpdate({"w": jnp.ones(1)}, n_samples=1))
+
+
+def test_fedbuff_buffers_then_applies_discounted_mean():
+    agg = FedBuff(buffer_size=2, staleness_exponent=1.0, server_lr=1.0,
+                  weight_by_samples=True)
+    g = {"w": jnp.zeros(1)}
+    first = agg.apply(g, ClientUpdate({"w": jnp.ones(1)}, n_samples=100,
+                                      staleness=0))
+    assert first is None  # buffered
+    out = agg.apply(g, ClientUpdate({"w": jnp.full((1,), 3.0)}, n_samples=100,
+                                    staleness=1))
+    # weights: 100*1, 100*0.5 -> (1*100 + 3*50) / 150 = 5/3
+    np.testing.assert_allclose(np.asarray(out["w"]), 5.0 / 3.0, rtol=1e-6)
+    # buffer cleared: next apply buffers again
+    assert agg.apply(g, ClientUpdate({"w": jnp.ones(1)}, 1, 0)) is None
+
+
+def test_fedbuff_reset_discards_partial_buffer():
+    agg = FedBuff(buffer_size=2)
+    g = {"w": jnp.zeros(1)}
+    assert agg.apply(g, ClientUpdate({"w": jnp.ones(1)}, 1, 0)) is None
+    agg.reset()     # run boundary: leftover update must not leak
+    assert agg.apply(g, ClientUpdate({"w": jnp.zeros(1)}, 1, 0)) is None
+    out = agg.apply(g, ClientUpdate({"w": jnp.zeros(1)}, 1, 0))
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.0)
+
+
+def test_fedbuff_server_lr_mixes_toward_global():
+    agg = FedBuff(buffer_size=1, staleness_exponent=0.0, server_lr=0.5)
+    g = {"w": jnp.zeros(1)}
+    out = agg.apply(g, ClientUpdate({"w": jnp.full((1,), 2.0)}, 10, 0))
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0)
+
+
+def test_sync_weighted_mean_streaming_round():
+    agg = SyncWeightedMean(weight_by_samples=True, round_size=2)
+    g = {"w": jnp.zeros(1)}
+    assert agg.apply(g, ClientUpdate({"w": jnp.ones(1)}, 30, 0)) is None
+    out = agg.apply(g, ClientUpdate({"w": jnp.zeros(1)}, 10, 0))
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.75)
+
+
+def test_sync_weighted_mean_requires_round_size_for_streaming():
+    agg = SyncWeightedMean()
+    with pytest.raises(ValueError):
+        agg.apply({"w": jnp.zeros(1)}, ClientUpdate({"w": jnp.ones(1)}, 1, 0))
+
+
+# ---------------------------------------------------------------------------
+# capability traces
+# ---------------------------------------------------------------------------
+
+def test_capability_trace_deterministic_and_order_free():
+    cfg = TraceConfig(jitter_std=0.2, slowdown_prob=0.3, seed=7)
+    spec = ClientSpec(cid=4, m=100, c=2.0)
+    a, b = CapabilityTrace(cfg), CapabilityTrace(cfg)
+    # query b out of order — trace must be a pure function of the index
+    got_b = {k: (b.capability(spec, k), b.jitter(spec, k))
+             for k in (5, 0, 3, 1, 4, 2)}
+    for k in range(6):
+        assert (a.capability(spec, k), a.jitter(spec, k)) == got_b[k]
+
+
+def test_capability_trace_slowdowns_reduce_capability():
+    cfg = TraceConfig(jitter_std=0.0, slowdown_prob=0.5, slowdown_factor=4.0,
+                      seed=0)
+    trace = CapabilityTrace(cfg)
+    spec = ClientSpec(cid=0, m=10, c=8.0)
+    caps = {trace.capability(spec, k) for k in range(64)}
+    assert caps == {8.0, 2.0}  # both states visited; factor honored
+    assert all(trace.jitter(spec, k) == 1.0 for k in range(8))
+
+
+# ---------------------------------------------------------------------------
+# async engine end-to-end
+# ---------------------------------------------------------------------------
+
+def test_async_determinism_byte_identical(tiny_fl):
+    model, train, test, specs = tiny_fl
+    cfg = _async_cfg()
+    outs = []
+    for _ in range(2):
+        strat = FedAvg(LocalTrainer(model, cfg.lr, cfg.batch_size))
+        outs.append(run_federated_async(model, train, specs, strat, cfg,
+                                        aggregator=FedAsync(),
+                                        test_data=test))
+    a, b = outs
+    assert "\n".join(a["event_log"]).encode() == \
+        "\n".join(b["event_log"]).encode()
+    assert [dataclasses.astuple(r) for r in a["history"]] == \
+        [dataclasses.astuple(r) for r in b["history"]]
+    assert a["telemetry"]["makespan"] == b["telemetry"]["makespan"]
+
+
+def test_async_seed_changes_trace(tiny_fl):
+    model, train, test, specs = tiny_fl
+    logs = []
+    for seed in (0, 1):
+        cfg = _async_cfg(seed=seed, trace=TraceConfig(seed=seed))
+        strat = FedAvg(LocalTrainer(model, cfg.lr, cfg.batch_size))
+        out = run_federated_async(model, train, specs, strat, cfg,
+                                  aggregator=FedAsync())
+        logs.append(out["event_log"])
+    assert logs[0] != logs[1]
+
+
+def test_async_respects_concurrency_cap(tiny_fl):
+    model, train, test, specs = tiny_fl
+    cfg = _async_cfg(concurrency=2)
+    strat = FedAvg(LocalTrainer(model, cfg.lr, cfg.batch_size))
+    out = run_federated_async(model, train, specs, strat, cfg,
+                              aggregator=FedAsync())
+    in_flight = 0
+    for line in out["event_log"]:
+        if " dispatch " in line:
+            in_flight += 1
+        else:
+            in_flight -= 1
+        assert in_flight <= 2
+
+
+def test_async_fedcore_smoke_converges_and_reports(tiny_fl):
+    model, train, test, specs = tiny_fl
+    cfg = _async_cfg(max_updates=30, epochs=5)
+    strat = FedCore(LocalTrainer(model, cfg.lr, cfg.batch_size))
+    out = run_federated_async(model, train, specs, strat, cfg,
+                              aggregator=FedAsync(mixing=0.6),
+                              test_data=test)
+    assert len(out["history"]) == 30 // cfg.record_every
+    assert out["history"][-1].test_acc > 0.5
+    assert sum(r.n_coreset for r in out["history"]) > 0  # coresets used
+    t = out["telemetry"]
+    assert t["n_updates_applied"] == 30
+    assert t["makespan"] > 0
+    assert 0.0 < t["client_utilization"] <= 1.0
+    assert t["staleness_hist"].sum() == 30
+    assert t["n_dispatches"] >= 30
+
+
+def test_async_dropped_stragglers_block_slot_until_deadline(tiny_fl):
+    model, train, test, specs = tiny_fl
+    # FedAvgDS under async: stragglers return None and hold their slot for τ
+    cfg = _async_cfg(max_updates=15)
+    strat = FedAvgDS(LocalTrainer(model, cfg.lr, cfg.batch_size))
+    out = run_federated_async(model, train, specs, strat, cfg,
+                              aggregator=FedAsync())
+    assert out["telemetry"]["n_dropped"] > 0
+    tau = out["deadline"]
+    drops = [l for l in out["event_log"]
+             if " complete " in l and f"dur={tau!r}" in l]
+    assert len(drops) >= out["telemetry"]["n_dropped"]
+
+
+def test_async_terminates_when_no_client_can_finish(tiny_fl):
+    model, train, test, specs = tiny_fl
+    # deadline below every client's round time: FedAvgDS drops everyone,
+    # no update is ever applied — the dispatch cap must end the run
+    cfg = _async_cfg(max_updates=5, deadline=1e-6, max_dispatches=30)
+    strat = FedAvgDS(LocalTrainer(model, cfg.lr, cfg.batch_size))
+    out = run_federated_async(model, train, specs, strat, cfg,
+                              aggregator=FedAsync())
+    t = out["telemetry"]
+    assert t["n_updates_applied"] == 0
+    assert t["n_dropped"] > 0
+    assert t["n_dispatches"] <= 30
+    assert out["history"][-1].n_dropped > 0  # tail record captures drops
+
+
+# ---------------------------------------------------------------------------
+# sync server: weight_by_samples routing
+# ---------------------------------------------------------------------------
+
+def test_run_federated_weight_by_samples_changes_aggregate(tiny_fl):
+    model, train, test, specs = tiny_fl
+    outs = {}
+    for wbs in (True, False):
+        cfg = FLConfig(rounds=2, clients_per_round=4, epochs=2, batch_size=8,
+                       lr=0.05, seed=0, weight_by_samples=wbs)
+        strat = FedAvg(LocalTrainer(model, cfg.lr, cfg.batch_size))
+        outs[wbs] = run_federated(model, train, specs, strat, cfg)
+    w_t = np.asarray(outs[True]["params"]["w"])
+    w_f = np.asarray(outs[False]["params"]["w"])
+    assert not np.allclose(w_t, w_f)

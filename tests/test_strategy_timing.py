@@ -2,7 +2,9 @@
 deadline guarantees of Alg. 1 over random client populations."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.coreset import coreset_budget, needs_coreset
 from repro.fed.simulator import ClientSpec, straggler_deadline
