@@ -1,9 +1,24 @@
 PY ?= python
 
-.PHONY: test bench-async
+.PHONY: test ci bench-async bench-fleet bench-fleet-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
+# CI entry point: CPU-pinned tier-1 suite + the fleet smoke sweep
+ci:
+	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) -m pytest -x -q
+	$(MAKE) bench-fleet-smoke
+
 bench-async:
 	PYTHONPATH=src $(PY) benchmarks/async_vs_sync.py --mode smoke
+
+# full fleet sweep: 1024-client engine benchmark + scenario matrix
+bench-fleet:
+	PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py
+
+# CI-sized sweep; --min-speedup 3 is the keep-green regression floor
+# (the tracked BENCH_fleet.json reports the real number, >= 5x locally)
+bench-fleet-smoke:
+	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
+		--smoke --min-speedup 3

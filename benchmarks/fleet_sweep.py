@@ -1,0 +1,228 @@
+"""Fleet-scale sweep: batched 1000+-client rounds + scenario matrix.
+
+Two measurements in one harness:
+
+1. **Engine benchmark** — one full federated round over N=1024 clients
+   (synthetic logreg workload, device-class-mixture capabilities),
+   executed twice from identical seeds: once by the batched fleet engine
+   (clients vmapped inside a handful of XLA programs) and once by the
+   per-client Python loop reference (same jitted math, one client per
+   dispatch).  Results must agree (same medoids, params within
+   tolerance); the report is clients/sec, virtual round makespan, and the
+   batched-over-loop wall-clock speedup (target: ≥ 5×).
+
+2. **Scenario sweep** — every named heterogeneity regime from
+   ``repro.fed.fleet.scenarios`` driven through BOTH the synchronous
+   server and the async event runtime at smoke scale, so regressions in
+   either path show up as a changed loss/makespan row.
+
+Writes ``BENCH_fleet.json`` next to this script (override with --out) so
+the perf trajectory is tracked in-repo.
+
+  PYTHONPATH=src python benchmarks/fleet_sweep.py --smoke     # CPU, ~2 min
+  PYTHONPATH=src python benchmarks/fleet_sweep.py             # full
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.data.partition import train_test_split_clients
+from repro.data.synthetic import synthetic_dataset
+from repro.fed.fleet.batched import (FleetConfig, FleetEngine,
+                                     make_cohort_groups, nominal_budgets,
+                                     run_fleet_round)
+from repro.fed.fleet.scenarios import SCENARIOS, build_scenario, run_scenario
+from repro.fed.simulator import straggler_deadline
+from repro.models.small import LogisticRegression
+
+SWEEP_SCENARIOS = ("uniform", "pareto", "diurnal", "flash_crowd",
+                   "device_classes")
+
+
+def _max_param_diff(a, b) -> float:
+    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def bench_engine(n_clients: int, epochs: int, batch_size: int,
+                 seed: int = 0, use_kernel: bool = False,
+                 verbose: bool = False) -> Dict:
+    """Time one identical 1024-client round through both engines."""
+    clients = synthetic_dataset(0.5, 0.5, n_clients=n_clients,
+                                mean_samples=48.0, std_samples=32.0,
+                                seed=seed)
+    train, _ = train_test_split_clients(clients, test_frac=0.2)
+    sizes = [len(d["y"]) for d in train]
+    specs, _ = build_scenario("device_classes", sizes, seed)
+    model = LogisticRegression()
+    cfg = FleetConfig(epochs=epochs, batch_size=batch_size, lr=0.05,
+                      seed=seed, use_kernel=use_kernel)
+    deadline = straggler_deadline(specs, cfg.epochs, 30.0)
+    budgets = nominal_budgets(specs, deadline, cfg.epochs)
+    engine = FleetEngine(model, cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    cids = list(range(len(specs)))
+
+    # cohort grouping is identical input prep for both engines (the round
+    # driver runs it once either way) — build it once, report it
+    # separately, and time *engine execution*: run every group through
+    # run_group + aggregate, exactly what run_fleet_round executes
+    t0 = time.perf_counter()
+    groups = make_cohort_groups(train, cids, budgets, cfg, round_seed=0)
+    prep_s = time.perf_counter() - t0
+
+    def timed(batched: bool, tag: str):
+        t0 = time.perf_counter()
+        out = run_fleet_round(engine, params, train, cids, budgets,
+                              round_seed=0, batched=batched,
+                              groups=groups)
+        jax.block_until_ready(out[0])
+        dt = time.perf_counter() - t0
+        if verbose:
+            label = "batched" if batched else "loop"
+            print(f"  [{label}] {tag:6s} {dt:8.3f}s")
+        return out, dt
+
+    # cold passes compile every group program; the comparison is the min
+    # over warm reps (wall clocks on shared CI boxes are noisy)
+    reps = 3
+    (_, _), cold_b = timed(True, "cold")
+    warm = [timed(True, f"warm{i}") for i in range(reps)]
+    (pb, sb), warm_b = warm[0][0], min(dt for _, dt in warm)
+    (_, _), cold_l = timed(False, "cold")
+    warm = [timed(False, f"warm{i}") for i in range(reps)]
+    (pl, sl), warm_l = warm[0][0], min(dt for _, dt in warm)
+
+    diff = _max_param_diff(pb, pl)
+    meds_equal = (set(sb.medoids) == set(sl.medoids) and all(
+        np.array_equal(sb.medoids[c], sl.medoids[c]) for c in sb.medoids))
+    speedup = warm_l / warm_b
+    makespan = max(sb.work[i] / specs[c].c
+                   for i, c in enumerate(sb.cids))
+    return {
+        "n_clients": n_clients,
+        "epochs": epochs,
+        "batch_size": batch_size,
+        "n_coreset_clients": int(sb.used_coreset.sum()),
+        "group_construction_s": prep_s,
+        "n_groups": len(groups),
+        "batched_wall_s": warm_b,
+        "loop_wall_s": warm_l,
+        "batched_cold_wall_s": cold_b,
+        "loop_cold_wall_s": cold_l,
+        "speedup": speedup,
+        "clients_per_sec": n_clients / warm_b,
+        "round_makespan_virtual_s": float(makespan),
+        "parity_max_param_diff": diff,
+        "parity_medoids_equal": bool(meds_equal),
+    }
+
+
+def sweep_scenarios(n_clients: int, rounds: int, epochs: int,
+                    seed: int = 0, verbose: bool = False) -> Dict:
+    """Every named scenario through both the sync server and the async
+    event runtime, from the one registry."""
+    clients = synthetic_dataset(0.5, 0.5, n_clients=n_clients,
+                                mean_samples=60.0, std_samples=60.0,
+                                seed=seed)
+    train, test = train_test_split_clients(clients, test_frac=0.3)
+    model = LogisticRegression()
+    table = {}
+    for name in SWEEP_SCENARIOS:
+        row = {"description": SCENARIOS[name].description}
+        for runtime in ("sync", "async"):
+            out = run_scenario(name, runtime, model, train, test,
+                               seed=seed, rounds=rounds,
+                               clients_per_round=max(4, n_clients // 6),
+                               epochs=epochs, batch_size=8,
+                               verbose=verbose)
+            hist = out["history"]
+            accs = [r.test_acc for r in hist if np.isfinite(r.test_acc)]
+            makespan = (out["telemetry"]["makespan"] if runtime == "async"
+                        else sum(r.sim_round_time for r in hist))
+            row[runtime] = {
+                "final_train_loss": float(hist[-1].train_loss),
+                "final_test_acc": float(accs[-1]) if accs else float("nan"),
+                "makespan_virtual_s": float(makespan),
+                "n_coreset": int(sum(r.n_coreset for r in hist)),
+            }
+            if verbose:
+                print(f"  {name:15s} {runtime:6s} "
+                      f"acc={row[runtime]['final_test_acc']:.3f} "
+                      f"makespan={makespan:9.1f}")
+        table[name] = row
+    return table
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CPU-sized run (the CI/Make target)")
+    ap.add_argument("--clients", type=int, default=None,
+                    help="engine-benchmark fleet size (default 1024)")
+    ap.add_argument("--epochs", type=int, default=None)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route distance stacks through the Pallas kernel")
+    ap.add_argument("--skip-scenarios", action="store_true")
+    ap.add_argument("--skip-engine", action="store_true")
+    ap.add_argument("--min-speedup", type=float, default=5.0)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "BENCH_fleet.json"))
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    n_clients = args.clients or 1024
+    epochs = args.epochs or (2 if args.smoke else 3)
+    report = {"mode": "smoke" if args.smoke else "full",
+              "backend": jax.default_backend()}
+    ok = True
+
+    if not args.skip_engine:
+        print(f"== engine: one {n_clients}-client round, "
+              f"batched vs per-client loop")
+        eng = bench_engine(n_clients, epochs, args.batch_size,
+                           seed=args.seed, use_kernel=args.use_kernel,
+                           verbose=True)
+        report["engine"] = eng
+        print(f"  clients/sec (batched): {eng['clients_per_sec']:10.1f}")
+        print(f"  round makespan (virtual): "
+              f"{eng['round_makespan_virtual_s']:8.1f}s")
+        print(f"  wall: batched {eng['batched_wall_s']:.3f}s  "
+              f"loop {eng['loop_wall_s']:.3f}s  "
+              f"speedup {eng['speedup']:.1f}x")
+        parity = (eng["parity_medoids_equal"]
+                  and eng["parity_max_param_diff"] < 1e-4)
+        print(f"  [{'PASS' if parity else 'FAIL'}] parity: medoids equal, "
+              f"max param diff {eng['parity_max_param_diff']:.2e}")
+        fast = eng["speedup"] >= args.min_speedup
+        print(f"  [{'PASS' if fast else 'FAIL'}] speedup "
+              f"{eng['speedup']:.1f}x >= {args.min_speedup:.1f}x")
+        ok = ok and parity and fast
+
+    if not args.skip_scenarios:
+        sc_clients = 24 if args.smoke else 64
+        sc_rounds = 3 if args.smoke else 8
+        print(f"\n== scenarios: {len(SWEEP_SCENARIOS)} regimes x "
+              f"{{sync, async}} at {sc_clients} clients")
+        report["scenarios"] = sweep_scenarios(
+            sc_clients, sc_rounds, epochs=2 if args.smoke else 3,
+            seed=args.seed, verbose=True)
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"\nwrote {args.out}")
+    print(f"overall: {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,52 @@
+"""Fleet-scale FedCore demo: adaptive participation over a 512-client
+device-class mixture, executed by the batched engine.
+
+Shows the three fleet pieces working together:
+  * a named scenario ("device_classes") materializes specs + a capability
+    trace from the registry;
+  * an ``AdaptiveParticipation`` scheduler starts with the 16 fastest
+    clients and doubles the cohort whenever train loss plateaus, while
+    conditioning each client's coreset budget on its *observed* (EWMA)
+    capability;
+  * ``run_fleet`` executes every round's whole cohort as a few vmapped
+    XLA programs — no per-client Python loop.
+
+  PYTHONPATH=src python examples/fleet_demo.py
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.partition import train_test_split_clients
+from repro.data.synthetic import synthetic_dataset
+from repro.fed.fleet import (AdaptiveParticipation, FleetConfig,
+                             ParticipationConfig, build_scenario, run_fleet)
+from repro.models.small import LogisticRegression
+
+
+def main() -> None:
+    n_clients = 512
+    clients = synthetic_dataset(0.5, 0.5, n_clients=n_clients,
+                                mean_samples=48.0, std_samples=32.0, seed=0)
+    train, test = train_test_split_clients(clients, test_frac=0.2)
+    sizes = [len(d["y"]) for d in train]
+    specs, trace = build_scenario("device_classes", sizes, seed=0)
+
+    model = LogisticRegression()
+    scheduler = AdaptiveParticipation(specs, ParticipationConfig(
+        min_cohort=16, growth_factor=2.0, plateau_tol=0.02))
+    cfg = FleetConfig(epochs=2, batch_size=32, lr=0.05, seed=0)
+
+    out = run_fleet(model, train, specs, cfg, rounds=8,
+                    scheduler=scheduler, trace=trace, test_data=test,
+                    verbose=True)
+
+    print("\ncohort trajectory:", out["cohort_sizes"])
+    print("scheduler:", scheduler.summary())
+    final = out["history"][-1]
+    print(f"final test acc {final.test_acc:.4f} "
+          f"(deadline {out['deadline']:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kmedoids import (KMedoidsResult, kmedoids_jax,
-                                 kmedoids_numpy, pairwise_sq_dists)
+from repro.core.kmedoids import (KMedoidsResult, kmedoids_batched,
+                                 kmedoids_jax, kmedoids_numpy,
+                                 pairwise_sq_dists)
 
 
 class Coreset(NamedTuple):
@@ -74,6 +75,32 @@ def build_coreset(features: jnp.ndarray, budget: int, *,
                    assignment=res.assignment)
 
 
+def build_coreset_batched(features: jnp.ndarray, valid: jnp.ndarray,
+                          budget: int, *, use_kernel: bool = False,
+                          max_sweeps: int = 50) -> Coreset:
+    """One coreset per client over a padded cohort stack (fleet engine).
+
+    features: (C, M, F) per-client gradient features, rows with
+    ``valid[c, i]`` False being padding; ``budget`` is the static per-client
+    k (clients are grouped by quantized budget upstream).  Returns a
+    ``Coreset`` of stacked fields — indices (C, k), weights (C, k), etc.
+    Each lane solves exactly the instance ``build_coreset`` would solve on
+    that client's unpadded features.
+    """
+    from repro.kernels.ops import pairwise_l2_batched
+    c, m, _ = features.shape
+    budget = min(budget, m)
+    D = pairwise_l2_batched(features, squared=False,
+                            use_kernel=use_kernel)
+    # exact zeros on each client's self-distance diagonal
+    D = D * (1.0 - jnp.eye(m, dtype=D.dtype))[None]
+    res = kmedoids_batched(D, valid, budget, max_sweeps=max_sweeps)
+    return Coreset(indices=res.medoids,
+                   weights=res.weights.astype(jnp.float32),
+                   objective=res.objective,
+                   assignment=res.assignment)
+
+
 def coreset_epsilon(grads_full: jnp.ndarray, coreset: Coreset) -> jnp.ndarray:
     """Audit Assumption A.3 on *true* per-sample gradients.
 
@@ -113,3 +140,7 @@ class FedCoreConfig:
     max_sweeps: int = 50
     refresh_every_round: bool = True  # paper: re-select each round
     projection_dim: Optional[int] = None  # JL projection (§Perf H3)
+    # Alg. 1 drop path for clients that cannot meet τ even with the §4.4
+    # minimal plan (coreset of 1, one partial epoch).  Default False:
+    # train the minimal plan and mark ClientResult.deadline_violated.
+    drop_infeasible: bool = False

@@ -105,18 +105,44 @@ def kmedoids_numpy(D: np.ndarray, k: int, max_sweeps: int = 100
 @partial(jax.jit, static_argnames=("k", "max_sweeps"))
 def kmedoids_jax(D: jnp.ndarray, k: int, max_sweeps: int = 50
                  ) -> KMedoidsResult:
+    """On-device BUILD+SWAP on an unpadded instance — the all-valid special
+    case of ``kmedoids_masked`` (one solver, one copy of the Δ-table math;
+    an all-True mask multiplies every reduction by exactly 1.0, so results
+    are bitwise those of an unmasked implementation)."""
+    return kmedoids_masked(D, jnp.ones((D.shape[0],), bool), k,
+                           max_sweeps=max_sweeps)
+
+
+@partial(jax.jit, static_argnames=("k", "max_sweeps"))
+def kmedoids_masked(D: jnp.ndarray, valid: jnp.ndarray, k: int,
+                    max_sweeps: int = 50) -> KMedoidsResult:
+    """``kmedoids_jax`` on a *padded* instance.
+
+    ``D`` is (M, M) where only the rows/cols with ``valid[i]`` True are real
+    samples; padded entries may hold arbitrary finite values.  Invalid points
+    are never selected as medoids, contribute nothing to any objective or Δ
+    sum, and get assignment −1 / weight 0.  With ``valid`` all-True this is
+    exactly ``kmedoids_jax`` (the unpadded solver) — the fleet engine relies
+    on that equivalence to vmap one solve per client over a cohort stack.
+
+    Callers must guarantee ``k <= valid.sum()`` (not checkable under jit).
+    """
     D = D.astype(jnp.float32)
     m = D.shape[0]
     k = min(k, m)
+    vf = valid.astype(jnp.float32)          # (m,) 1.0 on real samples
+    invalid = ~valid.astype(bool)
 
-    # ---- BUILD (greedy, unrolled over k adds via scan) --------------------
-    first = jnp.argmin(jnp.sum(D, axis=0)).astype(jnp.int32)
+    # ---- BUILD (greedy adds; sums masked by vf, invalid candidates BIG) ---
+    cost0 = jnp.sum(D * vf[:, None], axis=0)
+    cost0 = jnp.where(invalid, BIG, cost0)
+    first = jnp.argmin(cost0).astype(jnp.int32)
     d_near0 = D[:, first]
 
     def build_step(carry, _):
         d_near, chosen_mask = carry
-        cost = jnp.sum(jnp.minimum(d_near[:, None], D), axis=0)
-        cost = jnp.where(chosen_mask, BIG, cost)
+        cost = jnp.sum(jnp.minimum(d_near[:, None], D) * vf[:, None], axis=0)
+        cost = jnp.where(chosen_mask | invalid, BIG, cost)
         nxt = jnp.argmin(cost).astype(jnp.int32)
         d_near = jnp.minimum(d_near, D[:, nxt])
         chosen_mask = chosen_mask.at[nxt].set(True)
@@ -127,13 +153,12 @@ def kmedoids_jax(D: jnp.ndarray, k: int, max_sweeps: int = 50
                                 length=k - 1)
     medoids0 = jnp.concatenate([first[None], rest]) if k > 1 else first[None]
 
-    # ---- SWAP sweeps (FasterPAM Δ table, vectorized) -----------------------
+    # ---- SWAP sweeps (FasterPAM Δ table; all reductions masked by vf) -----
     def sweep(state):
         medoids, _, it = state
         dm = D[:, medoids]                                        # (m, k)
         if k > 1:
-            neg = -dm
-            top2_val, top2_idx = jax.lax.top_k(neg, 2)
+            top2_val, top2_idx = jax.lax.top_k(-dm, 2)
             d1 = -top2_val[:, 0]
             d2 = -top2_val[:, 1]
             n_idx = top2_idx[:, 0]
@@ -142,14 +167,15 @@ def kmedoids_jax(D: jnp.ndarray, k: int, max_sweeps: int = 50
             d2 = jnp.full((m,), BIG)
             n_idx = jnp.zeros((m,), jnp.int32)
 
-        shift = jnp.minimum(D - d1[:, None], 0.0)                 # (m_i, m_j)
+        shift = jnp.minimum(D - d1[:, None], 0.0) * vf[:, None]
         A = jnp.sum(shift, axis=0)                                # (m_j,)
-        contrib = jnp.minimum(D, d2[:, None]) - d1[:, None] - shift
-        onehot = jax.nn.one_hot(n_idx, k, dtype=contrib.dtype)    # (m_i, k)
+        contrib = ((jnp.minimum(D, d2[:, None]) - d1[:, None]) * vf[:, None]
+                   - shift)
+        onehot = jax.nn.one_hot(n_idx, k, dtype=contrib.dtype)
         B = jnp.einsum("ij,il->jl", contrib, onehot)              # (m_j, k)
         delta = A[:, None] + B
         is_medoid = jnp.zeros((m,), bool).at[medoids].set(True)
-        delta = jnp.where(is_medoid[:, None], BIG, delta)
+        delta = jnp.where((is_medoid | invalid)[:, None], BIG, delta)
         flat = jnp.argmin(delta)
         j, l = flat // k, flat % k
         best = delta.reshape(-1)[flat]
@@ -166,12 +192,27 @@ def kmedoids_jax(D: jnp.ndarray, k: int, max_sweeps: int = 50
     medoids, _, _ = jax.lax.while_loop(cond, sweep, state)
 
     dm = D[:, medoids]
-    assignment = jnp.argmin(dm, axis=1).astype(jnp.int32)
+    assignment = jnp.where(valid, jnp.argmin(dm, axis=1), -1).astype(jnp.int32)
     weights = jnp.sum(jax.nn.one_hot(assignment, k, dtype=jnp.int32), axis=0)
-    objective = jnp.sum(jnp.take_along_axis(dm, assignment[:, None],
-                                            axis=1)[:, 0])
+    objective = jnp.sum(jnp.min(dm, axis=1) * vf)
     return KMedoidsResult(medoids.astype(jnp.int32), assignment, weights,
                           objective)
+
+
+@partial(jax.jit, static_argnames=("k", "max_sweeps"))
+def kmedoids_batched(D: jnp.ndarray, valid: jnp.ndarray, k: int,
+                     max_sweeps: int = 50) -> KMedoidsResult:
+    """One masked k-medoids solve per client over a cohort stack.
+
+    D: (C, M, M) distance stack; valid: (C, M) sample masks; static ``k``
+    shared across the cohort (the fleet engine groups clients by quantized
+    budget).  Returns a ``KMedoidsResult`` of stacked fields.  The batched
+    ``while_loop`` runs until every client's swap phase converges; frozen
+    lanes keep their converged medoids, so each lane's result equals its
+    standalone ``kmedoids_masked`` solve.
+    """
+    return jax.vmap(lambda d, v: kmedoids_masked(d, v, k, max_sweeps))(
+        D, valid)
 
 
 def pairwise_sq_dists(x: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:

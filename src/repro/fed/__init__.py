@@ -42,3 +42,16 @@ from repro.fed.strategies import (  # noqa: F401
     LocalTrainer,
     Strategy,
 )
+
+# fleet imports repro.fed.server/simulator, so this must stay the last
+# import in this module (the submodules above are fully initialized by now)
+from repro.fed.fleet import (  # noqa: E402,F401
+    SCENARIOS,
+    AdaptiveParticipation,
+    FleetConfig,
+    FleetEngine,
+    ParticipationConfig,
+    build_scenario,
+    run_fleet,
+    run_scenario,
+)

@@ -104,10 +104,16 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
                         cfg: AsyncFLConfig,
                         aggregator: Optional[Aggregator] = None,
                         test_data: Optional[Dict] = None, init_params=None,
-                        eval_batch: int = 512, verbose: bool = False
-                        ) -> Dict[str, Any]:
+                        eval_batch: int = 512, scheduler=None,
+                        verbose: bool = False) -> Dict[str, Any]:
     """Drive ``strategy`` through the async event loop until
     ``cfg.max_updates`` server updates have been applied.
+
+    ``scheduler`` (optional) is an adaptive-participation policy with the
+    ``eligible_mask`` / ``observe`` / ``record_round`` protocol of
+    ``repro.fed.fleet.scheduler.AdaptiveParticipation``: dispatch is
+    restricted to its current cohort (FLANP doubling under asynchrony) and
+    it is fed every completion's realized (work, duration) pair.
 
     Returns the same shape of result as ``run_federated`` plus
     ``event_log`` (list of strings) and ``telemetry`` (utilization,
@@ -131,7 +137,8 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
     busy = np.zeros(n, bool)
     busy_time = np.zeros(n)
     dispatch_counts = np.zeros(n, np.int64)
-    # cid -> (ClientResult | None, dispatch version, dispatch-time params)
+    # cid -> (ClientResult | None, dispatch version, dispatch-time params,
+    #         realized work units)
     pending: Dict[int, Any] = {}
 
     queue = EventQueue()
@@ -143,24 +150,29 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
     applied = 0
     now = 0.0
     dropped_total = 0
+    violations_total = 0
     # per-record accumulators
     rec_times: List[float] = []
     rec_losses: List[float] = []
     rec_coreset = 0
     rec_dropped = 0
+    rec_violations = 0
     rec_start = 0.0
 
     def flush_record(t: float, eval_now: bool) -> None:
         nonlocal rec_times, rec_losses, rec_coreset, rec_dropped
-        nonlocal rec_applied, rec_start
+        nonlocal rec_violations, rec_applied, rec_start
         rec = RoundRecord(
             round=len(history), sim_round_time=t - rec_start,
             client_times=rec_times, n_participants=len(rec_times),
             n_dropped=rec_dropped, n_coreset=rec_coreset,
             train_loss=(float(np.mean(rec_losses)) if rec_losses
-                        else float("nan")))
+                        else float("nan")),
+            n_violations=rec_violations)
         if eval_fn and eval_now:
             rec.test_acc, rec.test_loss = eval_fn(params)
+        if scheduler is not None:
+            scheduler.record_round(rec.train_loss)
         history.append(rec)
         if verbose:
             print(f"[{strategy.name}/{aggregator.name}] "
@@ -168,7 +180,7 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
                   f"loss {rec.train_loss:.4f} acc {rec.test_acc:.4f} "
                   f"(core {rec_coreset}, drop {rec_dropped})")
         rec_times, rec_losses = [], []
-        rec_coreset = rec_dropped = rec_applied = 0
+        rec_coreset = rec_dropped = rec_violations = rec_applied = 0
         rec_start = t
 
     n_dispatched = 0    # push-time count — the dispatch_limit gate
@@ -178,6 +190,8 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
         if n_dispatched >= dispatch_limit:
             return False
         p = sizes * ~busy
+        if scheduler is not None:
+            p = p * scheduler.eligible_mask()
         total = p.sum()
         if total == 0.0:
             return False
@@ -213,25 +227,31 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
                                         deadline, cfg.epochs, rng)
             if res is None:     # dropped straggler: slot blocked until τ
                 duration = deadline
+                work = spec.c * deadline
             else:
                 duration = res.sim_time
                 if trace is not None:
                     duration *= trace.jitter(spec, k)
+                work = res.sim_time * spec.c
             # staleness anchors at *processing* time, when the params
             # snapshot is taken — ev.version (push time) can lag it when
             # another completion applied an update at the same timestamp
-            pending[ev.cid] = (res, version, params)
+            pending[ev.cid] = (res, version, params, work)
             queue.push(now + duration, COMPLETE, ev.cid, version, duration)
             continue
 
         # COMPLETE
-        res, v0, base_params = pending.pop(ev.cid)
+        res, v0, base_params, work = pending.pop(ev.cid)
         busy[ev.cid] = False
         busy_time[ev.cid] += ev.duration
+        if scheduler is not None:
+            scheduler.observe(ev.cid, work, ev.duration)
         if res is None:
             dropped_total += 1
             rec_dropped += 1
         else:
+            violations_total += int(res.deadline_violated)
+            rec_violations += int(res.deadline_violated)
             staleness = version - v0
             staleness_log.append(staleness)
             rec_times.append(ev.duration)
@@ -283,6 +303,7 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
         "n_dispatches": int(dispatch_counts.sum()),
         "n_updates_applied": applied,
         "n_dropped": dropped_total,
+        "n_violations": violations_total,
         "wall_time": _time.perf_counter() - wall0,
     }
     return {

@@ -1,0 +1,19 @@
+from repro.fed.fleet.batched import (  # noqa: F401
+    CohortGroup,
+    FleetConfig,
+    FleetEngine,
+    FleetRoundStats,
+    make_cohort_groups,
+    run_fleet,
+    run_fleet_round,
+)
+from repro.fed.fleet.scenarios import (  # noqa: F401
+    SCENARIOS,
+    Scenario,
+    build_scenario,
+    run_scenario,
+)
+from repro.fed.fleet.scheduler import (  # noqa: F401
+    AdaptiveParticipation,
+    ParticipationConfig,
+)

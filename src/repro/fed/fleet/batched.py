@@ -1,0 +1,489 @@
+"""Batched fleet client engine: 1000+-client rounds without a per-client
+Python loop.
+
+The synchronous server (``repro.fed.server``) and the async event runtime
+(``repro.fed.events``) both execute clients one at a time in Python — fine
+for cohorts of 10, hopeless at fleet scale where a single round touches a
+thousand devices.  This module executes an entire cohort as a handful of
+XLA programs:
+
+  * clients are padded into **cohort groups** keyed by (padded size M,
+    quantized coreset budget k): every client in a group shares static
+    shapes, so local SGD, gradient-feature extraction, the pairwise
+    distance stack (one (C, M, M) tensor per group, optionally via the
+    batched Pallas ``pairwise_l2`` kernel), and masked k-medoids all
+    ``vmap`` over the client axis;
+  * per-client randomness (epoch permutations) is drawn host-side from
+    ``(seed, round, cid)`` streams, so results are a pure function of the
+    seed regardless of grouping or execution order;
+  * the same arithmetic runs either vmapped (``engine="batched"``) or as
+    the status-quo per-client Python loop (``engine="loop"``): one client
+    at a time, one jitted dispatch per mini-batch step — the execution
+    model of ``repro.fed.strategies.LocalTrainer`` that the batched
+    engine replaces.  Both paths share every op, so they agree to
+    numerical tolerance — `benchmarks/fleet_sweep.py` verifies the
+    parity and measures the wall-clock gap, which is the whole point.
+
+Local-training semantics (deliberately simpler than
+``repro.fed.strategies`` so they batch): each epoch visits all M padded
+slots in a seeded per-client permutation, B at a time; padded samples
+carry zero loss weight, so a batch's gradient is the weighted mean over
+its real samples only.  Straggling clients run Alg. 1: one full-set
+epoch from the round-start params (which also yields the gradient
+features), k-medoids coreset selection, then E−1 weighted full-batch
+epochs on the coreset.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coreset import (build_coreset_batched, coreset_budget,
+                                needs_coreset)
+from repro.fed.server import RoundRecord, make_eval_fn
+from repro.fed.simulator import (CapabilityTrace, ClientSpec, TraceConfig,
+                                 straggler_deadline)
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    epochs: int = 2               # E
+    batch_size: int = 32          # B
+    lr: float = 0.05
+    use_kernel: bool = False      # Pallas pairwise kernel for distance stacks
+    max_sweeps: int = 25          # k-medoids swap sweeps
+    weight_by_samples: bool = True  # aggregate ∝ mⁱ (fleet cohorts are not
+    # sampled ∝ mⁱ, so size weighting is the unbiased choice here)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class CohortGroup:
+    """A same-shape slice of a cohort: C clients padded to M samples.
+
+    Arrays stay host-side (numpy): the batched engine moves each group to
+    the device as one stack, while the loop reference converts one
+    client's slice per dispatch — exactly the transfer pattern each
+    execution model would have in production."""
+    cids: np.ndarray              # (C,) global client ids
+    data: Dict[str, np.ndarray]   # stacked (C, M, ...) padded client data
+    valid: np.ndarray             # (C, M) bool — real-sample mask
+    m: np.ndarray                 # (C,) true sizes
+    k: int                        # coreset budget (0 = full-set training)
+    perms: np.ndarray             # (C, E, M) per-epoch sample permutations
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.cids)
+
+
+@dataclasses.dataclass
+class FleetRoundStats:
+    """Per-client outcome of one fleet round, in cohort order."""
+    cids: np.ndarray              # (N,)
+    m: np.ndarray                 # (N,)
+    budgets: np.ndarray           # (N,) effective budget (m if full-set)
+    used_coreset: np.ndarray      # (N,) bool
+    work: np.ndarray              # (N,) work units (samples visited)
+    losses: np.ndarray            # (N,) final local train loss
+    medoids: Dict[int, np.ndarray]  # cid -> (k,) selected sample indices
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def _floor_pow4(n: int) -> int:
+    """Largest power of 4 ≤ n — the coreset-budget quantizer.
+
+    Rounding budgets *down* can never violate a deadline (any k ≤ bⁱ is
+    deadline-safe); the coarse ×4 ladder keeps the number of distinct
+    (M, k) cohort groups — and hence compiled programs and dispatches —
+    small at fleet scale."""
+    return 1 << (((max(int(n), 1).bit_length() - 1) // 2) * 2)
+
+
+def _pad_rows(v: np.ndarray, m_pad: int) -> np.ndarray:
+    """Pad axis 0 to ``m_pad`` by repeating the last row (finite values that
+    keep feature scales sane; padded rows are masked everywhere)."""
+    m = v.shape[0]
+    if m == m_pad:
+        return v
+    return np.concatenate([v, np.repeat(v[-1:], m_pad - m, axis=0)])
+
+
+def nominal_budgets(specs: Sequence[ClientSpec], deadline: float,
+                    epochs: int) -> Dict[int, int]:
+    """Paper §4.2 budgets from nominal capabilities: bⁱ for clients that
+    need a coreset under (τ, E), mⁱ (full set) for the rest.  The shared
+    no-scheduler default of the fleet driver, sweep, and tests."""
+    return {s.cid: (coreset_budget(s.m, s.c, deadline, epochs)
+                    if needs_coreset(s.m, s.c, deadline, epochs) else s.m)
+            for s in specs}
+
+
+def make_cohort_groups(clients_data: Sequence[Dict[str, np.ndarray]],
+                       cids: Sequence[int], budgets: Dict[int, int],
+                       cfg: FleetConfig, round_seed: int = 0
+                       ) -> List[CohortGroup]:
+    """Bucket a cohort into same-shape groups.
+
+    ``budgets[cid]`` is the client's coreset budget; ``budgets[cid] >= m``
+    means full-set training.  Padded size M is the next power-of-two number
+    of batches; coreset budgets are quantized down to a power of two so a
+    group shares one static k (never exceeding any member's deadline
+    budget).  Per-client epoch permutations are drawn from
+    ``(cfg.seed, round_seed, cid)`` streams: the grouping is a pure
+    performance choice and cannot change any client's arithmetic.
+    """
+    by_key: Dict[Tuple[int, int], List[int]] = {}
+    for cid in cids:
+        m = len(next(iter(clients_data[cid].values())))
+        m_pad = _next_pow2(-(-m // cfg.batch_size)) * cfg.batch_size
+        b = int(budgets[cid])
+        k = 0 if b >= m else _floor_pow4(b)
+        by_key.setdefault((m_pad, k), []).append(cid)
+
+    groups = []
+    for (m_pad, k), members in sorted(by_key.items()):
+        stacked: Dict[str, np.ndarray] = {}
+        keys = [kk for kk in clients_data[members[0]] if kk != "weights"]
+        for kk in keys:
+            stacked[kk] = np.stack([
+                _pad_rows(np.asarray(clients_data[cid][kk]), m_pad)
+                for cid in members])
+        ms = np.array([len(next(iter(clients_data[cid].values())))
+                       for cid in members])
+        valid = np.arange(m_pad)[None, :] < ms[:, None]
+        base = np.tile(np.arange(m_pad), (cfg.epochs, 1))
+        perms = np.stack([
+            np.random.default_rng(
+                np.random.SeedSequence((cfg.seed, round_seed, cid))
+            ).permuted(base, axis=1)
+            for cid in members]).astype(np.int32)
+        groups.append(CohortGroup(
+            cids=np.array(members), data=stacked,
+            valid=valid, m=ms, k=k, perms=perms))
+    return groups
+
+
+class FleetEngine:
+    """Holds the jitted cohort programs (compiled once per group shape).
+
+    ``run_group(..., batched=True)`` executes all C clients of a group in
+    one vmapped program stack.  ``batched=False`` is the status-quo
+    per-client Python loop: the same mini-batch steps, feature pass, and
+    masked k-medoids solve, but dispatched one client at a time with one
+    jitted call per training step — the ``LocalTrainer.run_epochs``
+    execution model.  Identical arithmetic, so results match; only the
+    dispatch structure differs.
+    """
+
+    def __init__(self, model, cfg: FleetConfig):
+        self.model = model
+        self.cfg = cfg
+
+        def sgd_step(p, data, w, ix):
+            """One mini-batch SGD step for one client."""
+            batch = {kk: v[ix] for kk, v in data.items()}
+            batch["weights"] = w[ix]
+            (loss, _), g = jax.value_and_grad(
+                model.loss, has_aux=True)(p, batch)
+            p = jax.tree.map(lambda a, b: a - cfg.lr * b, p, g)
+            return p, loss
+
+        def sgd_scan(params, data, w, idx):
+            """One client: scan the step over idx (T, B) batches."""
+            def step(p, ix):
+                return sgd_step(p, data, w, ix)
+            params, losses = jax.lax.scan(step, params, idx)
+            return params, losses[-1]
+
+        def core_step(p, cdata, cw):
+            """One weighted full-batch epoch on one client's coreset."""
+            batch = dict(cdata, weights=cw)
+            (loss, _), g = jax.value_and_grad(
+                model.loss, has_aux=True)(p, batch)
+            p = jax.tree.map(lambda a, b: a - cfg.lr * b, p, g)
+            return p, loss
+
+        def core_scan(params, cdata, cw, n_steps_arr):
+            """One client: E−1 weighted full-batch epochs on its coreset."""
+            def step(p, _):
+                return core_step(p, cdata, cw)
+            params, losses = jax.lax.scan(step, params, n_steps_arr)
+            return params, losses[-1]
+
+        # batched cohort programs
+        self._sgd = jax.jit(jax.vmap(sgd_scan))
+        self._core = jax.jit(jax.vmap(core_scan))
+        self._feats = jax.jit(jax.vmap(
+            lambda p, d: model.grad_features(p, d), in_axes=(None, 0)))
+        self._gather = jax.jit(
+            jax.vmap(lambda v, idx: v[idx]))
+        # per-client loop reference programs (one dispatch per step)
+        self._sgd_step1 = jax.jit(sgd_step)
+        self._core_step1 = jax.jit(core_step)
+        self._feats1 = jax.jit(model.grad_features)
+
+    # -- helpers ----------------------------------------------------------
+
+    def _broadcast_params(self, params: Pytree, c: int) -> Pytree:
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (c,) + x.shape), params)
+
+    def _batch_indices(self, group: CohortGroup, epochs: slice, sl: slice
+                       ) -> jnp.ndarray:
+        """(C, T, B) minibatch index tensor for the given epoch/client
+        ranges (sliced host-side so the loop path pays per-client, not
+        per-group, conversion cost)."""
+        sel = group.perms[sl, epochs]                      # (C, e, M)
+        c, e, m_pad = sel.shape
+        b = self.cfg.batch_size
+        return jnp.asarray(sel.reshape(c, e * (m_pad // b), b))
+
+    # -- group execution --------------------------------------------------
+
+    def _run_group_stacked(self, params: Pytree, group: CohortGroup,
+                           sl: slice) -> Tuple[Pytree, jnp.ndarray,
+                                               Optional[jnp.ndarray]]:
+        """Run clients ``sl`` of a group; returns (params (C,...), losses,
+        medoid indices or None)."""
+        cfg = self.cfg
+        # host-side slice, then one device transfer per call: the batched
+        # path ships the whole group at once, the loop path one client at
+        # a time
+        data = {kk: jnp.asarray(v[sl]) for kk, v in group.data.items()}
+        c = len(next(iter(data.values())))
+        w = jnp.asarray(group.valid[sl].astype(np.float32))  # (C, M)
+        p0 = self._broadcast_params(params, c)
+
+        if group.k == 0:    # full-set: E epochs of minibatch SGD
+            idx = self._batch_indices(group, slice(None), sl)
+            p, losses = self._sgd(p0, data, w, idx)
+            return p, losses, None
+
+        # Alg. 1 straggler path: features at round-start params, coreset
+        # selection, one full-set epoch, E−1 coreset epochs.
+        feats = self._feats(params, data)                  # (C, M, F)
+        coreset = build_coreset_batched(
+            feats, jnp.asarray(group.valid[sl]), group.k,
+            use_kernel=cfg.use_kernel, max_sweeps=cfg.max_sweeps)
+        idx1 = self._batch_indices(group, slice(0, 1), sl)
+        p, _ = self._sgd(p0, data, w, idx1)
+        cdata = {kk: self._gather(v, coreset.indices)
+                 for kk, v in data.items()}                # (C, k, ...)
+        steps = jnp.zeros((c, max(cfg.epochs - 1, 1)))
+        p, losses = self._core(p, cdata, coreset.weights, steps)
+        return p, losses, coreset.indices
+
+    def _run_client_loop(self, params: Pytree, group: CohortGroup, c: int
+                         ) -> Tuple[Pytree, float, Optional[np.ndarray]]:
+        """Status-quo execution of one client: per-batch jitted dispatches
+        (the ``LocalTrainer.run_epochs`` model), identical arithmetic to
+        the vmapped lane."""
+        cfg = self.cfg
+        data = {kk: jnp.asarray(v[c]) for kk, v in group.data.items()}
+        w = jnp.asarray(group.valid[c].astype(np.float32))
+        m_pad = group.valid.shape[1]
+        idx = group.perms[c].reshape(cfg.epochs,
+                                     m_pad // cfg.batch_size,
+                                     cfg.batch_size)
+
+        def run_epoch(p, e):
+            loss = 0.0
+            for t in range(idx.shape[1]):
+                p, loss = self._sgd_step1(p, data, w, jnp.asarray(idx[e, t]))
+            return p, loss
+
+        if group.k == 0:
+            p, loss = params, 0.0
+            for e in range(cfg.epochs):
+                p, loss = run_epoch(p, e)
+            return p, float(loss), None
+
+        feats = self._feats1(params, data)
+        coreset = build_coreset_batched(
+            feats[None], jnp.asarray(group.valid[c:c + 1]), group.k,
+            use_kernel=cfg.use_kernel, max_sweeps=cfg.max_sweeps)
+        p, _ = run_epoch(params, 0)
+        med = np.asarray(coreset.indices[0])
+        cdata = {kk: v[jnp.asarray(med)] for kk, v in data.items()}
+        cw = coreset.weights[0]
+        loss = 0.0
+        for _ in range(max(cfg.epochs - 1, 1)):
+            p, loss = self._core_step1(p, cdata, cw)
+        return p, float(loss), med
+
+    def run_group(self, params: Pytree, group: CohortGroup,
+                  batched: bool = True) -> Tuple[Pytree, np.ndarray,
+                                                 Optional[np.ndarray]]:
+        if batched:
+            p, losses, meds = self._run_group_stacked(
+                params, group, slice(None))
+            return (p, np.asarray(losses),
+                    None if meds is None else np.asarray(meds))
+        # the per-client Python loop the batched engine replaces
+        ps, losses, meds = [], [], []
+        for c in range(group.n_clients):
+            p, loss, med = self._run_client_loop(params, group, c)
+            ps.append(p)
+            losses.append(loss)
+            if med is not None:
+                meds.append(med)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *ps)
+        return (stacked, np.array(losses),
+                np.stack(meds) if meds else None)
+
+
+def _aggregate_groups(partials: List[Tuple[Pytree, np.ndarray]]) -> Pytree:
+    """Weighted mean over all cohort clients: Σ_g Σ_c w·p / Σ w.
+
+    ``partials`` holds per-group (stacked client params, per-client
+    weights).  Group-partial sums keep the reduction order independent of
+    engine choice (batched and loop produce identical stacks).
+    """
+    total = sum(float(w.sum()) for _, w in partials)
+    acc = None
+    for stacked, w in partials:
+        ws = jnp.asarray(w, jnp.float32)
+        part = jax.tree.map(
+            lambda x: jnp.tensordot(ws, x.astype(jnp.float32), axes=(0, 0)),
+            stacked)
+        acc = part if acc is None else jax.tree.map(jnp.add, acc, part)
+    return jax.tree.map(lambda x: x / total, acc)
+
+
+def run_fleet_round(engine: FleetEngine, params: Pytree,
+                    clients_data: Sequence[Dict[str, np.ndarray]],
+                    cids: Sequence[int], budgets: Dict[int, int],
+                    round_seed: int = 0, batched: bool = True,
+                    groups: Optional[List[CohortGroup]] = None
+                    ) -> Tuple[Pytree, FleetRoundStats]:
+    """Execute one cohort round; returns (aggregated params, stats).
+
+    ``groups`` lets callers reuse a prebuilt cohort grouping (it is a pure
+    function of (clients_data, cids, budgets, cfg, round_seed))."""
+    cfg = engine.cfg
+    if groups is None:
+        groups = make_cohort_groups(clients_data, cids, budgets, cfg,
+                                    round_seed)
+    partials = []
+    all_cids, all_m, all_b, all_core, all_work, all_loss = \
+        [], [], [], [], [], []
+    medoids: Dict[int, np.ndarray] = {}
+    for g in groups:
+        p, losses, meds = engine.run_group(params, g, batched=batched)
+        w = (g.m.astype(np.float64) if cfg.weight_by_samples
+             else np.ones(g.n_clients))
+        partials.append((p, w))
+        all_cids.append(g.cids)
+        all_m.append(g.m)
+        eff_b = g.m if g.k == 0 else np.full(g.n_clients, g.k)
+        all_b.append(eff_b)
+        all_core.append(np.full(g.n_clients, g.k > 0))
+        work = (cfg.epochs * g.m if g.k == 0
+                else g.m + (cfg.epochs - 1) * g.k * np.ones(g.n_clients,
+                                                            np.int64))
+        all_work.append(work)
+        all_loss.append(losses)
+        if meds is not None:
+            for cid, med in zip(g.cids, meds):
+                medoids[int(cid)] = med
+    new_params = _aggregate_groups(partials)
+    stats = FleetRoundStats(
+        cids=np.concatenate(all_cids), m=np.concatenate(all_m),
+        budgets=np.concatenate(all_b),
+        used_coreset=np.concatenate(all_core),
+        work=np.concatenate(all_work).astype(np.float64),
+        losses=np.concatenate(all_loss), medoids=medoids)
+    return new_params, stats
+
+
+def run_fleet(model, clients_data: Sequence[Dict[str, np.ndarray]],
+              specs: Sequence[ClientSpec], cfg: FleetConfig, rounds: int,
+              scheduler=None, trace: Optional[TraceConfig] = None,
+              deadline: Optional[float] = None,
+              straggler_pct: float = 30.0,
+              test_data: Optional[Dict] = None, init_params=None,
+              engine: str = "batched", eval_every: int = 1,
+              verbose: bool = False) -> Dict[str, Any]:
+    """Multi-round fleet driver: adaptive cohorts + batched execution.
+
+    ``scheduler`` (an ``AdaptiveParticipation`` or anything with its
+    ``select`` / ``budget`` / ``observe`` / ``record_round`` protocol)
+    picks each round's cohort and conditions coreset budgets on *observed*
+    capability; without one, every client participates with nominal-
+    capability budgets.  ``trace`` perturbs per-round realized durations
+    (slowdown episodes + jitter) exactly as the async runtime does, which
+    is what gives the scheduler something to learn.
+    """
+    eng = FleetEngine(model, cfg)
+    params = (init_params if init_params is not None
+              else model.init(jax.random.PRNGKey(cfg.seed)))
+    if deadline is None:
+        deadline = straggler_deadline(specs, cfg.epochs, straggler_pct)
+    cap_trace = CapabilityTrace(trace) if trace is not None else None
+    eval_fn = make_eval_fn(model, test_data, 512) if test_data else None
+    batched = engine == "batched"
+
+    history: List[RoundRecord] = []
+    cohort_sizes: List[int] = []
+    for r in range(rounds):
+        if scheduler is not None:
+            cohort = [int(c) for c in scheduler.select()]
+            budgets = {cid: scheduler.budget(cid, deadline, cfg.epochs)
+                       for cid in cohort}
+        else:
+            cohort = list(range(len(specs)))
+            budgets = nominal_budgets(specs, deadline, cfg.epochs)
+        params, stats = run_fleet_round(eng, params, clients_data, cohort,
+                                        budgets, round_seed=r,
+                                        batched=batched)
+        durations = []
+        for cid, work in zip(stats.cids, stats.work):
+            s = specs[cid]
+            c_eff = (cap_trace.capability(s, r) if cap_trace is not None
+                     else s.c)
+            dur = work / c_eff
+            if cap_trace is not None:
+                dur *= cap_trace.jitter(s, r)
+            durations.append(dur)
+            if scheduler is not None:
+                scheduler.observe(int(cid), float(work), float(dur))
+        train_loss = float(np.mean(stats.losses))
+        if scheduler is not None:
+            scheduler.record_round(train_loss)
+        # honest τ accounting (mirrors ClientResult.deadline_violated):
+        # a budget clamped to 1 or a slowdown episode can still overrun τ
+        n_violations = int(sum(d > deadline * (1.0 + 1e-9)
+                               for d in durations))
+        rec = RoundRecord(
+            round=r, sim_round_time=float(np.max(durations)),
+            client_times=[float(d) for d in durations],
+            n_participants=len(cohort), n_dropped=0,
+            n_coreset=int(stats.used_coreset.sum()), train_loss=train_loss,
+            n_violations=n_violations)
+        if eval_fn and (r % eval_every == 0 or r == rounds - 1):
+            rec.test_acc, rec.test_loss = eval_fn(params)
+        history.append(rec)
+        cohort_sizes.append(len(cohort))
+        if verbose:
+            print(f"[fleet/{engine}] round {r:3d} cohort {len(cohort):5d} "
+                  f"core {rec.n_coreset:5d} time {rec.sim_round_time:9.1f}s "
+                  f"loss {train_loss:.4f} acc {rec.test_acc:.4f}")
+
+    return {
+        "params": params,
+        "history": history,
+        "deadline": deadline,
+        "engine": engine,
+        "cohort_sizes": cohort_sizes,
+        "strategy": "fedcore_fleet",
+    }

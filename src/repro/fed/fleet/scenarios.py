@@ -1,0 +1,173 @@
+"""Named heterogeneity scenarios and the unified sweep entry point.
+
+"Learning from Straggler Clients" (Hard et al., 2024) shows that which
+aggregation/participation rule wins depends on the *shape* of the fleet's
+arrival process, not just its mean — so the repo needs reusable, named
+regimes rather than one hard-coded capability sampler.  Each ``Scenario``
+pins (a) the static capability distribution and (b) the time-varying
+``TraceConfig`` (slowdown episodes + jitter) that together define a
+fleet's heterogeneity.  ``run_scenario`` drives the same scenario through
+any of the three runtimes — the synchronous server, the async event
+engine, or the batched fleet driver — so regimes are directly comparable
+across execution models.
+
+Registry (all capability samplers are mean-≈1 so deadlines stay
+comparable across scenarios):
+
+  * ``uniform``          — the paper's N(1, 0.25) population, mild jitter.
+  * ``pareto``           — Lomax(α=2) capabilities: a heavy tail of nearly-
+                           dead devices and a few very fast ones.
+  * ``diurnal``          — long correlated slow periods (devices charging /
+                           busy for many consecutive dispatches).
+  * ``flash_crowd``      — frequent short, severe contention spikes.
+  * ``device_classes``   — a 3-class hardware mixture (low-end 0.3×,
+                           mid 1×, flagship 3×) with per-device spread.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.fed.simulator import ClientSpec, TraceConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    capability_kind: str                  # normal | pareto | classes
+    cap_params: Tuple[float, ...] = ()
+    jitter_std: float = 0.1
+    slowdown_prob: float = 0.03
+    slowdown_factor: float = 3.0
+    slowdown_mean_len: float = 3.0
+
+    def sample_capabilities(self, n: int, rng: np.random.Generator,
+                            floor: float = 0.05) -> np.ndarray:
+        if self.capability_kind == "normal":
+            mean, var = self.cap_params
+            c = rng.normal(mean, np.sqrt(var), n)
+        elif self.capability_kind == "pareto":
+            (alpha,) = self.cap_params
+            # Lomax(α): mean 1/(α−1); α=2 ⇒ mean 1 with a heavy slow tail
+            c = rng.pareto(alpha, n)
+        elif self.capability_kind == "classes":
+            speeds = np.array(self.cap_params[0::2])
+            probs = np.array(self.cap_params[1::2])
+            cls = rng.choice(len(speeds), size=n, p=probs / probs.sum())
+            # ±20% lognormal per-device spread within a hardware class
+            c = speeds[cls] * rng.lognormal(-0.02, 0.2, n)
+        else:
+            raise ValueError(f"unknown capability_kind "
+                             f"{self.capability_kind!r}")
+        return np.maximum(c, floor)
+
+    def trace_config(self, seed: int) -> TraceConfig:
+        return TraceConfig(jitter_std=self.jitter_std,
+                           slowdown_prob=self.slowdown_prob,
+                           slowdown_factor=self.slowdown_factor,
+                           slowdown_mean_len=self.slowdown_mean_len,
+                           seed=seed)
+
+
+SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
+    Scenario("uniform",
+             "paper-default N(1, 0.25) capabilities, mild jitter",
+             "normal", (1.0, 0.25),
+             jitter_std=0.1, slowdown_prob=0.02),
+    Scenario("pareto",
+             "Lomax(2) heavy-tailed capabilities: many slow, few fast",
+             "pareto", (2.0,),
+             jitter_std=0.15, slowdown_prob=0.05),
+    Scenario("diurnal",
+             "long correlated slow episodes (charging/busy devices)",
+             "normal", (1.0, 0.1),
+             jitter_std=0.1, slowdown_prob=0.04, slowdown_factor=2.5,
+             slowdown_mean_len=12.0),
+    Scenario("flash_crowd",
+             "frequent short severe contention spikes",
+             "normal", (1.0, 0.15),
+             jitter_std=0.25, slowdown_prob=0.2, slowdown_factor=5.0,
+             slowdown_mean_len=2.0),
+    Scenario("device_classes",
+             "3-class hardware mixture: 20% 0.3x, 60% 1x, 20% 3x",
+             "classes", (0.3, 0.2, 1.0, 0.6, 3.0, 0.2),
+             jitter_std=0.12, slowdown_prob=0.03),
+]}
+
+
+def build_scenario(name: str, sizes: Sequence[int], seed: int = 0
+                   ) -> Tuple[List[ClientSpec], TraceConfig]:
+    """Materialize a named scenario for clients of the given data sizes."""
+    scenario = SCENARIOS[name]
+    # zlib.crc32, not hash(): str hashing is salted per process and would
+    # break cross-run scenario determinism
+    name_key = zlib.crc32(name.encode())
+    rng = np.random.default_rng(np.random.SeedSequence((seed, name_key)))
+    caps = scenario.sample_capabilities(len(sizes), rng)
+    specs = [ClientSpec(cid=i, m=int(m), c=float(c))
+             for i, (m, c) in enumerate(zip(sizes, caps))]
+    return specs, scenario.trace_config(seed)
+
+
+def run_scenario(name: str, runtime: str, model, clients_data,
+                 test_data: Optional[Dict] = None, *, seed: int = 0,
+                 rounds: int = 5, clients_per_round: int = 8,
+                 epochs: int = 3, batch_size: int = 8, lr: float = 0.05,
+                 straggler_pct: float = 30.0,
+                 max_updates: Optional[int] = None, concurrency: int = 8,
+                 scheduler=None, aggregator=None,
+                 verbose: bool = False) -> Dict[str, Any]:
+    """Drive one named scenario through one runtime.
+
+    ``runtime`` ∈ {"sync", "async", "fleet"}: the synchronous round server
+    (``run_federated`` with the FedCore strategy), the async event engine
+    (``run_federated_async``), or the batched fleet driver (``run_fleet``).
+    All three consume the same specs + capability trace from the registry,
+    so a scenario means the same fleet everywhere.  The result dict gains
+    ``scenario`` and ``runtime`` keys.
+    """
+    # late imports: repro.fed.{server,events,strategies} import nothing from
+    # fleet, keeping this the only direction of coupling
+    from repro.fed.events import AsyncFLConfig, run_federated_async
+    from repro.fed.fleet.batched import FleetConfig, run_fleet
+    from repro.fed.server import FLConfig, run_federated
+    from repro.fed.strategies import FedCore, LocalTrainer
+
+    sizes = [len(next(iter(d.values()))) for d in clients_data]
+    specs, trace = build_scenario(name, sizes, seed)
+
+    if runtime == "sync":
+        cfg = FLConfig(rounds=rounds, clients_per_round=clients_per_round,
+                       epochs=epochs, batch_size=batch_size, lr=lr,
+                       straggler_pct=straggler_pct, seed=seed, trace=trace)
+        strat = FedCore(LocalTrainer(model, lr, batch_size))
+        out = run_federated(model, clients_data, specs, strat, cfg,
+                            test_data=test_data, scheduler=scheduler,
+                            verbose=verbose)
+    elif runtime == "async":
+        cfg = AsyncFLConfig(
+            max_updates=max_updates or rounds * clients_per_round,
+            concurrency=concurrency, epochs=epochs, batch_size=batch_size,
+            lr=lr, straggler_pct=straggler_pct,
+            record_every=clients_per_round, seed=seed, trace=trace)
+        strat = FedCore(LocalTrainer(model, lr, batch_size))
+        out = run_federated_async(model, clients_data, specs, strat, cfg,
+                                  aggregator=aggregator,
+                                  test_data=test_data, scheduler=scheduler,
+                                  verbose=verbose)
+    elif runtime == "fleet":
+        cfg = FleetConfig(epochs=epochs, batch_size=batch_size, lr=lr,
+                          seed=seed)
+        out = run_fleet(model, clients_data, specs, cfg, rounds=rounds,
+                        scheduler=scheduler, trace=trace,
+                        straggler_pct=straggler_pct, test_data=test_data,
+                        verbose=verbose)
+    else:
+        raise ValueError(f"unknown runtime {runtime!r}")
+    out["scenario"] = name
+    out["runtime"] = runtime
+    return out

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fed.aggregators import SyncWeightedMean
-from repro.fed.simulator import ClientSpec, straggler_deadline
+from repro.fed.simulator import (CapabilityTrace, ClientSpec, TraceConfig,
+                                 straggler_deadline)
 from repro.fed.strategies import ClientResult, Strategy
 
 
@@ -37,6 +38,10 @@ class FLConfig:
     # uniform 1/K mean — weighting by mⁱ again would double-count size.
     # True is for uniform client sampling or deliberate size weighting.
     weight_by_samples: bool = False
+    # per-dispatch capability perturbations (slowdown episodes + jitter),
+    # same machinery the async runtime uses — lets scenario sweeps and
+    # participation schedulers see realistic durations in sync rounds too
+    trace: Optional[TraceConfig] = None
 
 
 @dataclasses.dataclass
@@ -51,6 +56,7 @@ class RoundRecord:
     test_acc: float = float("nan")
     test_loss: float = float("nan")
     wall_time: float = 0.0
+    n_violations: int = 0          # results flagged deadline_violated
 
 
 def sample_clients(specs: Sequence[ClientSpec], k: int,
@@ -64,7 +70,17 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
                   specs: List[ClientSpec], strategy: Strategy,
                   cfg: FLConfig, test_data: Optional[Dict] = None,
                   init_params=None, eval_batch: int = 512,
-                  verbose: bool = False) -> Dict[str, Any]:
+                  scheduler=None, verbose: bool = False) -> Dict[str, Any]:
+    """Synchronous Alg. 1 round loop.
+
+    ``scheduler`` (optional) is an adaptive-participation policy with the
+    ``select`` / ``observe`` / ``record_round`` protocol of
+    ``repro.fed.fleet.scheduler.AdaptiveParticipation`` (duck-typed to
+    avoid an import cycle): it replaces ∝ mⁱ sampling with its own cohort
+    and is fed realized durations, so FLANP-style doubling cohorts work on
+    the sync server too.  ``cfg.trace`` perturbs each dispatch's
+    capability exactly as the async runtime does.
+    """
     rng = np.random.default_rng(cfg.seed)
     params = (init_params if init_params is not None
               else model.init(jax.random.PRNGKey(cfg.seed)))
@@ -75,34 +91,55 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
     history: List[RoundRecord] = []
     eval_fn = make_eval_fn(model, test_data, eval_batch) if test_data else None
     aggregator = SyncWeightedMean(cfg.weight_by_samples)
+    trace = CapabilityTrace(cfg.trace) if cfg.trace is not None else None
+    dispatch_counts = np.zeros(len(specs), np.int64)
 
     for r in range(cfg.rounds):
         t0 = time.perf_counter()
-        selected = sample_clients(specs, cfg.clients_per_round, rng)
+        if scheduler is not None:
+            selected = [int(c) for c in scheduler.select()]
+        else:
+            selected = sample_clients(specs, cfg.clients_per_round, rng)
         results: List[ClientResult] = []
+        times: List[float] = []
         dropped = 0
         for cid in selected:
-            res = strategy.local_update(params, clients_data[cid],
-                                        specs[cid], deadline, cfg.epochs,
-                                        rng)
+            spec = specs[cid]
+            k = int(dispatch_counts[cid])
+            dispatch_counts[cid] += 1
+            if trace is not None:
+                spec = dataclasses.replace(spec,
+                                           c=trace.capability(spec, k))
+            res = strategy.local_update(params, clients_data[cid], spec,
+                                        deadline, cfg.epochs, rng)
             if res is None:
                 dropped += 1
+                if scheduler is not None:   # a drop still occupies τ
+                    scheduler.observe(cid, spec.c * deadline, deadline)
             else:
+                duration = res.sim_time
+                if trace is not None:
+                    duration *= trace.jitter(spec, k)
                 results.append(res)
+                times.append(duration)
+                if scheduler is not None:
+                    scheduler.observe(cid, res.sim_time * spec.c, duration)
 
         if results:
             params = aggregator.aggregate([r_.params for r_ in results],
                                           [r_.n_samples for r_ in results])
-        times = [r_.sim_time for r_ in results]
         # dropped stragglers in FedAvg-DS still busy until τ
         round_time = max(times + ([deadline] if dropped else [0.0]))
         train_loss = float(np.mean([r_.final_loss for r_ in results])
                            ) if results else float("nan")
+        if scheduler is not None:
+            scheduler.record_round(train_loss)
         rec = RoundRecord(
             round=r, sim_round_time=round_time, client_times=times,
             n_participants=len(results), n_dropped=dropped,
             n_coreset=sum(r_.used_coreset for r_ in results),
-            train_loss=train_loss, wall_time=time.perf_counter() - t0)
+            train_loss=train_loss, wall_time=time.perf_counter() - t0,
+            n_violations=sum(r_.deadline_violated for r_ in results))
         if eval_fn and (r % cfg.eval_every == 0 or r == cfg.rounds - 1):
             rec.test_acc, rec.test_loss = eval_fn(params)
         history.append(rec)

@@ -34,6 +34,11 @@ class ClientResult:
     coreset_size: int = 0
     epochs_done: float = 0.0
     final_loss: float = 0.0
+    # True when even the §4.4 minimal plan (coreset of 1, single partial
+    # epoch) cannot meet τ: the client trained anyway but finished late.
+    # Footnote 2's honest accounting — the server can see which results
+    # broke the deadline instead of a silent budget-clamped-to-1 fiction.
+    deadline_violated: bool = False
 
 
 def _pad_batch(batch: Dict[str, np.ndarray], batch_size: int
@@ -184,6 +189,7 @@ class FedCore(Strategy):
             work = spec.m + (epochs - 1) * budget
             if work > spec.c * deadline:  # budget floored at 1 but too slow
                 can_full_first_epoch = False
+        violated = False
         if not can_full_first_epoch:
             # §4.4 fallback: forward-only feature pass, coreset-only epochs;
             # for extreme stragglers also shed epochs (footnote 2: beyond
@@ -192,6 +198,13 @@ class FedCore(Strategy):
             budget = max(1, min(int(avail // epochs), spec.m))
             eff_epochs = max(1, min(epochs, int(avail // budget)))
             work = FORWARD_FRAC * spec.m + eff_epochs * budget
+            # cⁱτ < m/3 + b: even the minimal plan overruns τ.  Alg. 1 has
+            # no budget left to shed — either drop the client (FedAvg-DS
+            # semantics, opt-in) or train the minimal plan and surface the
+            # violation instead of clamping silently.
+            violated = work > spec.c * deadline * (1.0 + 1e-9)
+            if violated and cc.drop_infeasible:
+                return None
 
         coreset = build_coreset(feats, budget, backend=cc.backend,
                                 use_kernel=cc.use_kernel,
@@ -210,7 +223,8 @@ class FedCore(Strategy):
                                                       eff_epochs, rng)
         return ClientResult(params, spec.m, work / spec.c, used_coreset=True,
                             coreset_size=int(budget),
-                            epochs_done=eff_epochs, final_loss=loss)
+                            epochs_done=eff_epochs, final_loss=loss,
+                            deadline_violated=violated)
 
 
 STRATEGIES = {

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.pairwise_l2 import pairwise_l2_pallas
+from repro.kernels.pairwise_l2 import (pairwise_l2_batched_pallas,
+                                       pairwise_l2_pallas)
 from repro.kernels.rmsnorm import rmsnorm_pallas
 
 
@@ -58,6 +59,34 @@ def pairwise_l2(x, y=None, *, squared: bool = False, block_m: int = 128,
                              block_n=block_n, block_k=bk,
                              interpret=interpret)
     return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("squared", "use_kernel",
+                                             "block_m", "block_k",
+                                             "interpret"))
+def pairwise_l2_batched(x, *, squared: bool = False, use_kernel: bool = True,
+                        block_m: int = 128, block_k: int = 512,
+                        interpret: Optional[bool] = None):
+    """Per-client self-distance stacks: x (C, M, D) -> (C, M, M).
+
+    The fleet engine's batched coreset-selection front end.  Pads M and D
+    to block multiples (zero rows are exact for the cross term, and padded
+    rows/cols are sliced off before returning) and dispatches to the
+    batched Pallas kernel; ``use_kernel=False`` is the identical-math jnp
+    einsum formulation for backends/shapes the kernel doesn't cover.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    if not use_kernel:
+        return jax.vmap(lambda xi: ref.pairwise_l2_ref(xi, squared=squared)
+                        )(x)
+    xp, m = _pad_to(x, 1, block_m)
+    xp, _ = _pad_to(xp, 2, 128)
+    bk = min(block_k, xp.shape[2])
+    while xp.shape[2] % bk:
+        bk //= 2
+    out = pairwise_l2_batched_pallas(xp, squared=squared, block_m=block_m,
+                                     block_k=bk, interpret=interpret)
+    return out[:, :m, :m]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",

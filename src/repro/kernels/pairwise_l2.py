@@ -86,3 +86,67 @@ def pairwise_l2_pallas(x: jnp.ndarray, y: Optional[jnp.ndarray] = None, *,
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
     )(x, y, xsq, ysq)
+
+
+def _pairwise_batched_kernel(xi_ref, xj_ref, sqi_ref, sqj_ref, out_ref,
+                             acc_ref, *, squared: bool, n_k: int):
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xi = xi_ref[0].astype(jnp.float32)           # (bm, bk) rows
+    xj = xj_ref[0].astype(jnp.float32)           # (bn, bk) cols
+    acc_ref[...] += jax.lax.dot_general(
+        xi, xj, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # xi @ xj.T for this client
+
+    @pl.when(k_step == n_k - 1)
+    def _epilogue():
+        sqi = sqi_ref[0].astype(jnp.float32)     # (bm,)
+        sqj = sqj_ref[0].astype(jnp.float32)     # (bn,)
+        d = sqi[:, None] + sqj[None, :] - 2.0 * acc_ref[...]
+        d = jnp.maximum(d, 0.0)
+        if not squared:
+            d = jnp.sqrt(d)
+        out_ref[0] = d.astype(out_ref.dtype)
+
+
+def pairwise_l2_batched_pallas(x: jnp.ndarray, *, squared: bool = False,
+                               block_m: int = 128, block_k: int = 512,
+                               interpret: bool = False) -> jnp.ndarray:
+    """Self-distance stacks for a client cohort: x (C, M, D) -> (C, M, M).
+
+    The fleet engine's hot path (one distance matrix per client per round).
+    Identical tiling to ``pairwise_l2_pallas`` with a leading client grid
+    dimension — one (c, i, j) tile accumulates its −2·XXᵀ cross term over
+    k-steps in VMEM and fuses the ‖·‖² epilogue on the last step.  Shapes
+    must already be padded to block multiples (ops.py handles this).
+    """
+    c, m, d = x.shape
+    block_m = min(block_m, m)
+    block_k = min(block_k, d)
+    assert m % block_m == 0 and d % block_k == 0
+    n_k = d // block_k
+
+    xsq = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)     # (C, M)
+
+    grid = (c, m // block_m, m // block_m, n_k)
+    kernel = functools.partial(_pairwise_batched_kernel, squared=squared,
+                               n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_k), lambda b, i, j, k: (b, i, k)),
+            pl.BlockSpec((1, block_m, block_k), lambda b, i, j, k: (b, j, k)),
+            pl.BlockSpec((1, block_m), lambda b, i, j, k: (b, i)),
+            pl.BlockSpec((1, block_m), lambda b, i, j, k: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_m),
+                               lambda b, i, j, k: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((c, m, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_m), jnp.float32)],
+        interpret=interpret,
+    )(x, x, xsq, xsq)

@@ -281,3 +281,16 @@ def test_run_federated_weight_by_samples_changes_aggregate(tiny_fl):
     w_t = np.asarray(outs[True]["params"]["w"])
     w_f = np.asarray(outs[False]["params"]["w"])
     assert not np.allclose(w_t, w_f)
+
+
+def test_async_violations_in_history_and_telemetry(tiny_fl):
+    model, train, test, specs = tiny_fl
+    # impossible deadline: every FedCore update runs the minimal plan and
+    # overruns τ — flagged per record and in the telemetry total
+    cfg = _async_cfg(max_updates=10, deadline=1e-3)
+    strat = FedCore(LocalTrainer(model, cfg.lr, cfg.batch_size))
+    out = run_federated_async(model, train, specs, strat, cfg,
+                              aggregator=FedAsync())
+    t = out["telemetry"]
+    assert t["n_violations"] == t["n_updates_applied"] == 10
+    assert sum(r.n_violations for r in out["history"]) == 10

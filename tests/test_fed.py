@@ -92,3 +92,57 @@ def test_fedavg_ds_drops_stragglers(small_fl):
     trainer = LocalTrainer(model, cfg.lr, cfg.batch_size)
     out = run_federated(model, train, specs, FedAvgDS(trainer), cfg)
     assert sum(r.n_dropped for r in out["history"]) > 0
+
+
+def test_fedcore_infeasible_client_is_surfaced(small_fl):
+    """A client with cⁱτ below even the §4.4 minimal plan must not silently
+    pretend to meet τ: the result is flagged (or dropped when opted in)."""
+    from repro.core.coreset import FedCoreConfig
+
+    model, train, _, _, cfg = small_fl
+    trainer = LocalTrainer(model, cfg.lr, cfg.batch_size)
+    data = train[0]
+    m = len(data["y"])
+    # capability*deadline << m/3: even forward-only + 1-sample coreset
+    # overruns the deadline
+    spec = ClientSpec(cid=0, m=m, c=0.1)
+    deadline = 1.0
+    rng = np.random.default_rng(0)
+    params = model.init(jax.random.PRNGKey(0))
+
+    res = FedCore(trainer).local_update(params, data, spec, deadline,
+                                        epochs=5, rng=rng)
+    assert res is not None
+    assert res.deadline_violated
+    assert res.used_coreset and res.coreset_size == 1
+    assert res.sim_time > deadline        # honest accounting, not clamped
+
+    dropping = FedCore(trainer, FedCoreConfig(drop_infeasible=True))
+    assert dropping.local_update(params, data, spec, deadline, epochs=5,
+                                 rng=rng) is None
+
+
+def test_fedcore_feasible_fallback_not_flagged(small_fl):
+    """The §4.4 fallback that *does* fit in τ must not be flagged."""
+    model, train, _, _, cfg = small_fl
+    trainer = LocalTrainer(model, cfg.lr, cfg.batch_size)
+    data = train[0]
+    m = len(data["y"])
+    # cτ < m blocks the full first epoch, but leaves room for the
+    # forward pass plus a real coreset budget
+    spec = ClientSpec(cid=0, m=m, c=float(0.8 * m))
+    res = FedCore(trainer).local_update(
+        model.init(jax.random.PRNGKey(0)), data, spec, deadline=1.0,
+        epochs=5, rng=np.random.default_rng(0))
+    assert res is not None and res.used_coreset
+    assert not res.deadline_violated
+    assert res.sim_time <= 1.0 + 1e-9
+
+
+def test_run_federated_counts_violations(small_fl):
+    model, train, _, specs, _ = small_fl
+    cfg = FLConfig(rounds=2, clients_per_round=4, epochs=5, batch_size=8,
+                   lr=0.05, deadline=1e-3, seed=0)   # impossible deadline
+    trainer = LocalTrainer(model, cfg.lr, cfg.batch_size)
+    out = run_federated(model, train, specs, FedCore(trainer), cfg)
+    assert all(r.n_violations == r.n_participants for r in out["history"])

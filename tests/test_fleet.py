@@ -1,0 +1,333 @@
+"""Fleet subsystem tests: batched kernels/solvers, cohort grouping,
+batched-vs-loop engine parity, adaptive participation, and scenario
+determinism through both the sync server and the async event runtime."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coreset import coreset_budget
+from repro.core.kmedoids import (kmedoids_batched, kmedoids_jax,
+                                 kmedoids_masked, pairwise_sq_dists)
+from repro.data.partition import train_test_split_clients
+from repro.data.synthetic import synthetic_dataset
+from repro.fed.fleet.batched import (FleetConfig, FleetEngine, _floor_pow4,
+                                     _next_pow2, make_cohort_groups,
+                                     nominal_budgets, run_fleet,
+                                     run_fleet_round)
+from repro.fed.fleet.scenarios import SCENARIOS, build_scenario, run_scenario
+from repro.fed.fleet.scheduler import (AdaptiveParticipation,
+                                       ParticipationConfig)
+from repro.fed.simulator import (ClientSpec, make_client_specs,
+                                 straggler_deadline)
+from repro.kernels.ops import pairwise_l2, pairwise_l2_batched
+from repro.models.small import LogisticRegression
+
+
+@pytest.fixture(scope="module")
+def fleet_fl():
+    clients = synthetic_dataset(0.5, 0.5, n_clients=16, mean_samples=60,
+                                std_samples=40, seed=3)
+    train, test = train_test_split_clients(clients)
+    rng = np.random.default_rng(3)
+    specs = make_client_specs([len(d["y"]) for d in train], rng)
+    return LogisticRegression(), train, test, specs
+
+
+# ---------------------------------------------------------------------------
+# batched primitives
+# ---------------------------------------------------------------------------
+
+def test_pairwise_l2_batched_matches_unbatched():
+    x = np.random.default_rng(0).normal(size=(3, 40, 60)).astype(np.float32)
+    xj = jnp.asarray(x)
+    for squared in (True, False):
+        ref = np.stack([np.asarray(pairwise_l2(xj[c], squared=squared))
+                        for c in range(3)])
+        got = np.asarray(pairwise_l2_batched(xj, squared=squared,
+                                             use_kernel=True))
+        np.testing.assert_allclose(got, ref, atol=2e-4)
+
+
+def test_kmedoids_masked_matches_unpadded():
+    rng = np.random.default_rng(1)
+    m, m_pad, k = 21, 32, 5
+    x = rng.normal(size=(m, 6)).astype(np.float32)
+    D = np.sqrt(np.maximum(np.asarray(pairwise_sq_dists(jnp.asarray(x))), 0))
+    Dp = rng.normal(size=(m_pad, m_pad)).astype(np.float32) * 50  # garbage
+    Dp[:m, :m] = D
+    valid = np.arange(m_pad) < m
+    ref = kmedoids_jax(jnp.asarray(D), k)
+    got = kmedoids_masked(jnp.asarray(Dp), jnp.asarray(valid), k)
+    np.testing.assert_array_equal(np.asarray(got.medoids),
+                                  np.asarray(ref.medoids))
+    np.testing.assert_array_equal(np.asarray(got.weights),
+                                  np.asarray(ref.weights))
+    np.testing.assert_allclose(float(got.objective), float(ref.objective),
+                               rtol=1e-5)
+    assert (np.asarray(got.assignment)[m:] == -1).all()
+
+
+def test_kmedoids_batched_equals_per_lane():
+    rng = np.random.default_rng(2)
+    C, m_pad, k = 5, 24, 3
+    Ds, vs = [], []
+    for _ in range(C):
+        m = int(rng.integers(6, m_pad + 1))
+        x = rng.normal(size=(m, 4)).astype(np.float32)
+        D = np.sqrt(np.maximum(
+            np.asarray(pairwise_sq_dists(jnp.asarray(x))), 0))
+        Dp = np.zeros((m_pad, m_pad), np.float32)
+        Dp[:m, :m] = D
+        Ds.append(Dp)
+        vs.append(np.arange(m_pad) < m)
+    Ds, vs = jnp.asarray(np.stack(Ds)), jnp.asarray(np.stack(vs))
+    batched = kmedoids_batched(Ds, vs, k)
+    for c in range(C):
+        lane = kmedoids_masked(Ds[c], vs[c], k)
+        np.testing.assert_array_equal(np.asarray(batched.medoids[c]),
+                                      np.asarray(lane.medoids))
+
+
+# ---------------------------------------------------------------------------
+# cohort grouping
+# ---------------------------------------------------------------------------
+
+def test_pow_helpers():
+    assert [_next_pow2(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    assert [_floor_pow4(n) for n in (1, 3, 4, 15, 16, 80)] == \
+        [1, 1, 4, 4, 16, 64]
+
+
+def test_cohort_groups_partition_and_pad(fleet_fl):
+    _, train, _, specs = fleet_fl
+    cfg = FleetConfig(epochs=2, batch_size=16, seed=0)
+    deadline = straggler_deadline(specs, cfg.epochs, 30.0)
+    budgets = nominal_budgets(specs, deadline, cfg.epochs)
+    cids = list(range(len(specs)))
+    groups = make_cohort_groups(train, cids, budgets, cfg, round_seed=1)
+    seen = np.concatenate([g.cids for g in groups])
+    assert sorted(seen.tolist()) == cids          # exact partition
+    for g in groups:
+        c, m_pad = g.valid.shape
+        assert m_pad % cfg.batch_size == 0
+        assert g.perms.shape == (c, cfg.epochs, m_pad)
+        for i in range(c):
+            # valid prefix mask matches true sizes; perms are permutations
+            assert g.valid[i].sum() == g.m[i] <= m_pad
+            for e in range(cfg.epochs):
+                assert sorted(g.perms[i, e].tolist()) == list(range(m_pad))
+            if g.k > 0:   # quantized budget never exceeds the true budget
+                assert g.k <= budgets[g.cids[i]]
+
+
+def test_cohort_groups_rng_independent_of_grouping(fleet_fl):
+    _, train, _, specs = fleet_fl
+    cfg = FleetConfig(epochs=2, batch_size=16, seed=0)
+    deadline = straggler_deadline(specs, cfg.epochs, 30.0)
+    budgets = nominal_budgets(specs, deadline, cfg.epochs)
+    full = make_cohort_groups(train, list(range(len(specs))), budgets, cfg, 0)
+    solo = make_cohort_groups(train, [5], budgets, cfg, 0)
+    g, idx = next((g, list(g.cids).index(5)) for g in full if 5 in g.cids)
+    np.testing.assert_array_equal(g.perms[idx], solo[0].perms[0])
+
+
+# ---------------------------------------------------------------------------
+# engine parity + determinism
+# ---------------------------------------------------------------------------
+
+def test_batched_engine_matches_per_client_loop(fleet_fl):
+    model, train, _, specs = fleet_fl
+    cfg = FleetConfig(epochs=3, batch_size=16, lr=0.05, seed=0)
+    deadline = straggler_deadline(specs, cfg.epochs, 40.0)
+    budgets = nominal_budgets(specs, deadline, cfg.epochs)
+    engine = FleetEngine(model, cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cids = list(range(len(specs)))
+    pb, sb = run_fleet_round(engine, params, train, cids, budgets,
+                             round_seed=0, batched=True)
+    pl, sl = run_fleet_round(engine, params, train, cids, budgets,
+                             round_seed=0, batched=False)
+    assert sb.used_coreset.sum() > 0      # the straggler path is exercised
+    for a, b in zip(jax.tree.leaves(pb), jax.tree.leaves(pl)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    assert set(sb.medoids) == set(sl.medoids)
+    for cid in sb.medoids:
+        np.testing.assert_array_equal(sb.medoids[cid], sl.medoids[cid])
+    np.testing.assert_allclose(sb.losses, sl.losses, atol=1e-5)
+
+
+def test_run_fleet_deterministic_and_trace_sensitive(fleet_fl):
+    model, train, test, specs = fleet_fl
+    _, trace = build_scenario("flash_crowd", [s.m for s in specs], seed=0)
+    cfg = FleetConfig(epochs=2, batch_size=16, seed=0)
+
+    def go():
+        return run_fleet(model, train, specs, cfg, rounds=2, trace=trace,
+                         test_data=test)
+    a, b = go(), go()
+    assert [dataclasses.astuple(r) for r in a["history"]] == \
+        [dataclasses.astuple(r) for r in b["history"]]
+    for x, y in zip(jax.tree.leaves(a["params"]),
+                    jax.tree.leaves(b["params"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # the trace perturbs durations relative to a no-trace run
+    c = run_fleet(model, train, specs, cfg, rounds=2, test_data=test)
+    assert a["history"][0].client_times != c["history"][0].client_times
+
+
+# ---------------------------------------------------------------------------
+# adaptive participation
+# ---------------------------------------------------------------------------
+
+def _specs(caps, m=50):
+    return [ClientSpec(cid=i, m=m, c=float(c)) for i, c in enumerate(caps)]
+
+
+def test_scheduler_selects_fastest_and_explores():
+    specs = _specs([1.0, 9.0, 8.0, 0.1, 7.0, 0.2, 0.3, 6.0])
+    sched = AdaptiveParticipation(specs, ParticipationConfig(
+        min_cohort=4, explore_frac=0.25, seed=0))
+    cohort = sched.select()
+    assert len(cohort) == 4
+    # 3 fastest guaranteed, 1 explored from the rest
+    assert {1, 2, 4} <= set(cohort.tolist())
+    # dispatch weights: cohort at 1.0, soft exploration tail at explore_frac
+    mask = sched.eligible_mask()
+    assert (mask == 1.0).sum() == 4 and (mask[[1, 2, 4, 7]] == 1.0).all()
+    assert (mask[[0, 3, 5, 6]] == 0.25).all()
+
+
+def test_scheduler_doubles_on_plateau():
+    specs = _specs(np.ones(64))
+    sched = AdaptiveParticipation(specs, ParticipationConfig(
+        min_cohort=4, growth_factor=2.0, plateau_tol=0.01,
+        plateau_patience=1))
+    sizes = []
+    for _ in range(6):
+        sizes.append(sched.cohort_size())
+        sched.record_round(1.0)       # never improves => plateau every round
+    # round 0 only sets the loss baseline; doubling starts at round 1
+    assert sizes == [4, 4, 8, 16, 32, 64]
+    sched.record_round(1.0)
+    assert sched.cohort_size() == 64  # capped at the fleet size
+
+
+def test_scheduler_improvement_defers_growth():
+    specs = _specs(np.ones(16))
+    sched = AdaptiveParticipation(specs, ParticipationConfig(
+        min_cohort=4, plateau_tol=0.01, plateau_patience=1))
+    loss = 1.0
+    for _ in range(4):
+        sched.record_round(loss)
+        loss *= 0.5                   # strong improvement every round
+    assert sched.cohort_size() == 4
+    assert sched.growth_log == []
+
+
+def test_scheduler_observed_capability_reranks_and_rebudgets():
+    specs = _specs([2.0, 1.0], m=100)
+    sched = AdaptiveParticipation(specs, ParticipationConfig(
+        min_cohort=1, explore_frac=0.0, ewma=1.0))
+    assert sched.select().tolist() == [0]
+    # client 0 turns out to be 20x slower than nominal
+    sched.observe(0, work_units=100.0, duration=1000.0)
+    assert sched.select().tolist() == [1]
+    # budget follows the observed capability, not the spec sheet
+    b_nominal = coreset_budget(100, 2.0, deadline=100.0, epochs=3)
+    assert b_nominal == 50
+    b_observed = sched.budget(0, deadline=100.0, epochs=3)
+    assert b_observed < b_nominal
+    assert b_observed == coreset_budget(100, 0.1, 100.0, 3)
+
+
+# ---------------------------------------------------------------------------
+# scenarios through both runtimes, from one registry
+# ---------------------------------------------------------------------------
+
+SWEPT = ("uniform", "pareto", "flash_crowd", "device_classes")
+
+
+def test_registry_has_named_regimes():
+    assert set(SWEPT) <= set(SCENARIOS)
+    assert len(SCENARIOS) >= 5
+    sizes = [40] * 200
+    for name in SCENARIOS:
+        specs, trace = build_scenario(name, sizes, seed=0)
+        caps = np.array([s.c for s in specs])
+        assert (caps > 0).all()
+        assert 0.3 < caps.mean() < 3.0   # mean-≈1 so deadlines compare
+        specs2, _ = build_scenario(name, sizes, seed=0)
+        assert [s.c for s in specs2] == [s.c for s in specs]
+
+
+@pytest.mark.parametrize("name", SWEPT)
+def test_scenario_sync_deterministic(fleet_fl, name):
+    model, train, test, _ = fleet_fl
+
+    def go():
+        return run_scenario(name, "sync", model, train, seed=1, rounds=2,
+                            clients_per_round=3, epochs=2, batch_size=8)
+
+    def virtual(history):   # drop wall_time — the only real-clock field
+        recs = [dataclasses.asdict(r) for r in history]
+        for r in recs:
+            r.pop("wall_time")
+        return recs
+    a, b = go(), go()
+    assert virtual(a["history"]) == virtual(b["history"])
+    for x, y in zip(jax.tree.leaves(a["params"]),
+                    jax.tree.leaves(b["params"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("name", SWEPT)
+def test_scenario_async_deterministic(fleet_fl, name):
+    model, train, test, _ = fleet_fl
+
+    def go():
+        return run_scenario(name, "async", model, train, seed=1,
+                            max_updates=6, clients_per_round=3,
+                            concurrency=3, epochs=2, batch_size=8)
+    a, b = go(), go()
+    assert "\n".join(a["event_log"]).encode() == \
+        "\n".join(b["event_log"]).encode()
+    assert a["telemetry"]["makespan"] == b["telemetry"]["makespan"]
+
+
+def test_scenarios_differ_from_each_other(fleet_fl):
+    model, train, _, _ = fleet_fl
+    logs = {}
+    for name in ("uniform", "flash_crowd"):
+        out = run_scenario(name, "async", model, train, seed=1,
+                           max_updates=6, concurrency=3, epochs=2,
+                           batch_size=8)
+        logs[name] = out["event_log"]
+    assert logs["uniform"] != logs["flash_crowd"]
+
+
+def test_async_scheduler_restricts_dispatch(fleet_fl):
+    model, train, _, specs = fleet_fl
+    # ewma=0 freezes the ranking so the eligible set is constant all run
+    sched = AdaptiveParticipation(specs, ParticipationConfig(
+        min_cohort=4, explore_frac=0.0, plateau_tol=1.0,
+        max_cohort=4, ewma=0.0))
+    out = run_scenario("uniform", "async", model, train, seed=1,
+                       max_updates=8, concurrency=4, epochs=2,
+                       batch_size=8, scheduler=sched)
+    eligible = set(np.flatnonzero(sched.eligible_mask()).tolist())
+    dispatched = {int(line.split("cid=")[1].split(" ")[0])
+                  for line in out["event_log"] if " dispatch " in line}
+    assert dispatched <= eligible
+    assert (sched._n_obs > 0).sum() > 0
+
+
+def test_fleet_runtime_via_registry(fleet_fl):
+    model, train, test, _ = fleet_fl
+    out = run_scenario("device_classes", "fleet", model, train, test,
+                       seed=0, rounds=2, epochs=2, batch_size=16)
+    assert out["runtime"] == "fleet"
+    assert len(out["history"]) == 2
+    assert np.isfinite(out["history"][-1].test_acc)

@@ -1,0 +1,93 @@
+"""CapabilityTrace/TraceConfig unit tests: seeded determinism, episode
+statistics, and mean-1 jitter normalization (previously untested)."""
+import numpy as np
+
+from repro.fed.simulator import CapabilityTrace, ClientSpec, TraceConfig
+
+SPEC = ClientSpec(cid=3, m=100, c=2.0)
+
+
+def _episode_lengths(flags):
+    lengths, run = [], 0
+    for f in flags:
+        if f:
+            run += 1
+        elif run:
+            lengths.append(run)
+            run = 0
+    if run:
+        lengths.append(run)
+    return lengths
+
+
+def test_same_seed_same_trace_across_instances():
+    cfg = TraceConfig(jitter_std=0.2, slowdown_prob=0.1, seed=11)
+    a, b = CapabilityTrace(cfg), CapabilityTrace(cfg)
+    got_a = [(a.capability(SPEC, k), a.jitter(SPEC, k)) for k in range(64)]
+    got_b = [(b.capability(SPEC, k), b.jitter(SPEC, k)) for k in range(64)]
+    assert got_a == got_b
+
+
+def test_query_order_does_not_change_trace():
+    cfg = TraceConfig(jitter_std=0.2, slowdown_prob=0.2, seed=5)
+    fwd, rev = CapabilityTrace(cfg), CapabilityTrace(cfg)
+    ks = list(range(32))
+    a = {k: (fwd.capability(SPEC, k), fwd.jitter(SPEC, k)) for k in ks}
+    b = {k: (rev.capability(SPEC, k), rev.jitter(SPEC, k))
+         for k in reversed(ks)}
+    assert a == b
+
+
+def test_different_seeds_and_clients_decorrelate():
+    cfg0, cfg1 = TraceConfig(seed=0), TraceConfig(seed=1)
+    t0, t1 = CapabilityTrace(cfg0), CapabilityTrace(cfg1)
+    seq0 = [t0.jitter(SPEC, k) for k in range(32)]
+    seq1 = [t1.jitter(SPEC, k) for k in range(32)]
+    assert seq0 != seq1
+    other = ClientSpec(cid=4, m=100, c=2.0)
+    assert seq0 != [t0.jitter(other, k) for k in range(32)]
+
+
+def test_slowdown_episode_bounds():
+    mean_len = 4.0
+    cfg = TraceConfig(jitter_std=0.0, slowdown_prob=0.05,
+                      slowdown_factor=2.0, slowdown_mean_len=mean_len,
+                      seed=7)
+    trace = CapabilityTrace(cfg)
+    n = 4000
+    slowed = [trace.capability(SPEC, k) < SPEC.c for k in range(n)]
+    lengths = _episode_lengths(slowed)
+    assert lengths, "episodes must occur at slowdown_prob=0.05 over 4000"
+    # geometric episode lengths: empirical mean within 35% of the target
+    assert abs(np.mean(lengths) - mean_len) < 0.35 * mean_len
+    # stationary occupancy p/(p + 1/L) stays in a sane band
+    frac = np.mean(slowed)
+    assert 0.05 < frac < 0.40
+
+
+def test_no_slowdowns_when_probability_zero():
+    cfg = TraceConfig(jitter_std=0.0, slowdown_prob=0.0, seed=0)
+    trace = CapabilityTrace(cfg)
+    assert all(trace.capability(SPEC, k) == SPEC.c for k in range(128))
+    assert all(trace.jitter(SPEC, k) == 1.0 for k in range(128))
+
+
+def test_slowdown_factor_is_exact_divisor():
+    cfg = TraceConfig(jitter_std=0.0, slowdown_prob=0.5,
+                      slowdown_factor=4.0, seed=1)
+    trace = CapabilityTrace(cfg)
+    caps = {trace.capability(SPEC, k) for k in range(256)}
+    assert caps == {SPEC.c, SPEC.c / 4.0}
+
+
+def test_jitter_is_mean_one():
+    # E[lognormal(-σ²/2, σ)] = 1: jitter must not systematically inflate
+    # realized durations relative to the sync timing model
+    cfg = TraceConfig(jitter_std=0.3, slowdown_prob=0.0, seed=2)
+    trace = CapabilityTrace(cfg)
+    samples = np.array([trace.jitter(ClientSpec(cid=c, m=10, c=1.0), k)
+                        for c in range(40) for k in range(100)])
+    assert (samples > 0).all()
+    # 4000 samples: se(mean) ≈ σ/√n ≈ 0.005, so 0.02 is a ±4σ band
+    assert abs(samples.mean() - 1.0) < 0.02
+    assert abs(np.log(samples).std() - cfg.jitter_std) < 0.02
