@@ -1,6 +1,7 @@
 PY ?= python
 
-.PHONY: test ci bench-async bench-fleet bench-fleet-smoke
+.PHONY: test ci bench-async bench-fleet bench-fleet-smoke \
+	bench-fleet-sharded
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -22,3 +23,14 @@ bench-fleet:
 bench-fleet-smoke:
 	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
 		--smoke --min-speedup 3
+
+# sharded-engine scaling sweep: one subprocess per device count (XLA
+# forced host-platform devices on CPU); gates on sharded==batched parity
+# and on the mesh never being *slower* than one device; records the
+# measured throughput per device count (wall-clock scaling is bounded by
+# the host's physical cores — see sharded_scaling.n_cpu_cores; the >=2x
+# target needs a >=4-core host or real accelerators)
+bench-fleet-sharded:
+	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
+		--smoke --skip-engine --skip-scenarios --device-sweep 1,2,4 \
+		--min-scaling 1.0

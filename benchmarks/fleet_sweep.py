@@ -16,19 +16,33 @@ Two measurements in one harness:
    server and the async event runtime at smoke scale, so regressions in
    either path show up as a changed loss/makespan row.
 
+3. **Sharded device sweep** (``--device-sweep 1,2,4``) — the mesh-sharded
+   engine (``repro.fed.fleet.sharded``) timed at increasing device
+   counts on the same fleet, one subprocess per count (XLA fixes the
+   host-platform device count at import, so each point re-execs this
+   script with ``--xla_force_host_platform_device_count=N``).  Records
+   round throughput per device count plus a sharded-vs-batched parity
+   check at the largest mesh.  Wall-clock scaling on CPU is bounded by
+   the physical core count — the recorded ``n_cpu_cores`` says how much
+   parallelism the host could possibly expose.
+
 Writes ``BENCH_fleet.json`` next to this script (override with --out) so
 the perf trajectory is tracked in-repo.
 
   PYTHONPATH=src python benchmarks/fleet_sweep.py --smoke     # CPU, ~2 min
   PYTHONPATH=src python benchmarks/fleet_sweep.py             # full
+  PYTHONPATH=src python benchmarks/fleet_sweep.py --smoke \
+      --skip-engine --skip-scenarios --device-sweep 1,2,4     # scaling
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
+import sys
 import time
-from typing import Dict
+from typing import Dict, List
 
 import jax
 import numpy as np
@@ -41,6 +55,7 @@ from repro.fed.fleet.batched import (FleetConfig, FleetEngine,
 from repro.fed.fleet.scenarios import SCENARIOS, build_scenario, run_scenario
 from repro.fed.simulator import straggler_deadline
 from repro.models.small import LogisticRegression
+from repro.utils.xla_env import forced_host_device_env
 
 SWEEP_SCENARIOS = ("uniform", "pareto", "diurnal", "flash_crowd",
                    "device_classes")
@@ -125,6 +140,103 @@ def bench_engine(n_clients: int, epochs: int, batch_size: int,
     }
 
 
+def _sharded_fleet(n_clients: int, epochs: int, batch_size: int, seed: int):
+    """Shared workload builder for the device sweep (worker + parity)."""
+    clients = synthetic_dataset(0.5, 0.5, n_clients=n_clients,
+                                mean_samples=160.0, std_samples=64.0,
+                                seed=seed)
+    train, _ = train_test_split_clients(clients, test_frac=0.2)
+    sizes = [len(d["y"]) for d in train]
+    specs, _ = build_scenario("device_classes", sizes, seed)
+    model = LogisticRegression()
+    cfg = FleetConfig(epochs=epochs, batch_size=batch_size, lr=0.05,
+                      seed=seed)
+    deadline = straggler_deadline(specs, cfg.epochs, 30.0)
+    budgets = nominal_budgets(specs, deadline, cfg.epochs)
+    return model, train, specs, cfg, budgets
+
+
+def sharded_worker(n_clients: int, epochs: int, batch_size: int, seed: int,
+                   parity: bool, reps: int = 5) -> Dict:
+    """One device-sweep point: time sharded rounds at this process's
+    device count.  Prints a RESULT: JSON line for the parent to parse."""
+    from repro.fed.fleet.sharded import ShardedFleetEngine, client_mesh
+    model, train, specs, cfg, budgets = _sharded_fleet(
+        n_clients, epochs, batch_size, seed)
+    params = model.init(jax.random.PRNGKey(seed))
+    cids = list(range(len(specs)))
+    groups = make_cohort_groups(train, cids, budgets, cfg, round_seed=0)
+    engine = ShardedFleetEngine(model, cfg, mesh=client_mesh())
+
+    def timed(eng, mode):
+        t0 = time.perf_counter()
+        out = run_fleet_round(eng, params, train, cids, budgets,
+                              round_seed=0, mode=mode, groups=groups)
+        jax.block_until_ready(out[0])
+        return out, time.perf_counter() - t0
+
+    (_, _), cold = timed(engine, "sharded")
+    warm_runs = [timed(engine, "sharded") for _ in range(reps)]
+    (ps, ss), warm = warm_runs[0][0], min(dt for _, dt in warm_runs)
+    result = {
+        "n_devices": len(jax.devices()),
+        "n_clients": n_clients,
+        "cold_wall_s": cold,
+        "warm_wall_s": warm,
+        "clients_per_sec": n_clients / warm,
+    }
+    if parity:
+        eng_b = FleetEngine(model, cfg)
+        timed(eng_b, "batched")     # compile
+        (pb, sb), _ = timed(eng_b, "batched")
+        result["parity_max_param_diff"] = _max_param_diff(ps, pb)
+        result["parity_medoids_equal"] = bool(
+            set(ss.medoids) == set(sb.medoids) and all(
+                np.array_equal(ss.medoids[c], sb.medoids[c])
+                for c in sb.medoids))
+    print("RESULT:" + json.dumps(result))
+    return result
+
+
+def bench_sharded_scaling(device_counts: List[int], n_clients: int,
+                          epochs: int, batch_size: int, seed: int) -> Dict:
+    """Run one subprocess per device count; collect throughput + parity."""
+    per_count: Dict[str, Dict] = {}
+    for nd in device_counts:
+        cmd = [sys.executable, os.path.abspath(__file__), "--sharded-worker",
+               "--clients", str(n_clients), "--epochs", str(epochs),
+               "--batch-size", str(batch_size), "--seed", str(seed)]
+        if nd == max(device_counts):
+            cmd.append("--parity")
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        proc = subprocess.run(cmd, env=forced_host_device_env(nd, repo),
+                              capture_output=True, text=True)
+        line = next((ln for ln in proc.stdout.splitlines()
+                     if ln.startswith("RESULT:")), None)
+        if proc.returncode != 0 or line is None:
+            raise RuntimeError(
+                f"device-sweep worker (devices={nd}) failed:\n"
+                f"{proc.stdout}\n{proc.stderr}")
+        row = json.loads(line[len("RESULT:"):])
+        per_count[str(nd)] = row
+        print(f"  devices {nd}: warm {row['warm_wall_s']:.3f}s "
+              f"({row['clients_per_sec']:.0f} clients/s)")
+    lo, hi = str(min(device_counts)), str(max(device_counts))
+    speedup = (per_count[hi]["clients_per_sec"]
+               / per_count[lo]["clients_per_sec"])
+    return {
+        "n_cpu_cores": os.cpu_count(),
+        "device_counts": device_counts,
+        "workload": {"n_clients": n_clients, "epochs": epochs,
+                     "batch_size": batch_size, "seed": seed},
+        "per_device_count": per_count,
+        "throughput_speedup_max_vs_min": speedup,
+        "parity_max_param_diff":
+            per_count[hi].get("parity_max_param_diff"),
+        "parity_medoids_equal": per_count[hi].get("parity_medoids_equal"),
+    }
+
+
 def sweep_scenarios(n_clients: int, rounds: int, epochs: int,
                     seed: int = 0, verbose: bool = False) -> Dict:
     """Every named scenario through both the sync server and the async
@@ -175,10 +287,28 @@ def main(argv=None) -> int:
     ap.add_argument("--skip-scenarios", action="store_true")
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--min-speedup", type=float, default=5.0)
+    ap.add_argument("--device-sweep", default="",
+                    help="comma-separated device counts for the sharded "
+                         "engine scaling sweep (e.g. 1,2,4); each count "
+                         "runs in a subprocess with XLA's forced "
+                         "host-platform device count")
+    ap.add_argument("--min-scaling", type=float, default=0.0,
+                    help="fail if max-vs-min device throughput gain falls "
+                         "below this (0 = record only; CPU wall-clock "
+                         "scaling is bounded by physical cores)")
+    ap.add_argument("--sharded-worker", action="store_true",
+                    help=argparse.SUPPRESS)   # internal: one sweep point
+    ap.add_argument("--parity", action="store_true",
+                    help=argparse.SUPPRESS)   # worker: also check parity
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.abspath(__file__)), "BENCH_fleet.json"))
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
+
+    if args.sharded_worker:
+        sharded_worker(args.clients or 512, args.epochs or 3,
+                       args.batch_size, args.seed, parity=args.parity)
+        return 0
 
     n_clients = args.clients or 1024
     epochs = args.epochs or (2 if args.smoke else 3)
@@ -217,6 +347,44 @@ def main(argv=None) -> int:
             sc_clients, sc_rounds, epochs=2 if args.smoke else 3,
             seed=args.seed, verbose=True)
 
+    if args.device_sweep:
+        counts = sorted({int(c) for c in args.device_sweep.split(",")})
+        sw_clients = args.clients or (512 if args.smoke else 1024)
+        print(f"\n== sharded engine: device sweep {counts} at "
+              f"{sw_clients} clients ({os.cpu_count()} physical cores)")
+        scaling = bench_sharded_scaling(counts, sw_clients,
+                                        args.epochs or 3, args.batch_size,
+                                        args.seed)
+        report["sharded_scaling"] = scaling
+        gain = scaling["throughput_speedup_max_vs_min"]
+        parity_ok = (scaling["parity_medoids_equal"] is not False and
+                     (scaling["parity_max_param_diff"] or 0.0) < 1e-4)
+        print(f"  [{'PASS' if parity_ok else 'FAIL'}] sharded==batched "
+              f"parity at {max(counts)} devices "
+              f"(max param diff {scaling['parity_max_param_diff']:.2e})")
+        print(f"  throughput gain {max(counts)}dev vs {min(counts)}dev: "
+              f"{gain:.2f}x (host has {os.cpu_count()} cores)")
+        ok = ok and parity_ok
+        if args.min_scaling > 0:
+            scaled = gain >= args.min_scaling
+            print(f"  [{'PASS' if scaled else 'FAIL'}] scaling {gain:.2f}x "
+                  f">= {args.min_scaling:.1f}x")
+            ok = ok and scaled
+
+    # partial runs (--skip-*) update their sections of the tracked report
+    # instead of clobbering the others
+    if os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                merged = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            merged = {}
+        if args.skip_engine and args.skip_scenarios and "mode" in merged:
+            # a sections-only run must not relabel the mode that produced
+            # the engine/scenario numbers already in the file
+            report.pop("mode", None)
+        merged.update(report)
+        report = merged
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
     print(f"\nwrote {args.out}")

@@ -12,8 +12,13 @@ Shows the three fleet pieces working together:
     XLA programs — no per-client Python loop.
 
   PYTHONPATH=src python examples/fleet_demo.py
+  # mesh-sharded execution over N virtual CPU devices:
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/fleet_demo.py --engine sharded
 """
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -25,6 +30,13 @@ from repro.models.small import LogisticRegression
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="batched",
+                    choices=("batched", "loop", "sharded"),
+                    help="fleet execution model; 'sharded' runs cohort "
+                         "groups data-parallel over all devices (falls "
+                         "back to batched on a one-device host)")
+    args = ap.parse_args()
     n_clients = 512
     clients = synthetic_dataset(0.5, 0.5, n_clients=n_clients,
                                 mean_samples=48.0, std_samples=32.0, seed=0)
@@ -39,9 +51,11 @@ def main() -> None:
 
     out = run_fleet(model, train, specs, cfg, rounds=8,
                     scheduler=scheduler, trace=trace, test_data=test,
-                    verbose=True)
+                    engine=args.engine, verbose=True)
 
-    print("\ncohort trajectory:", out["cohort_sizes"])
+    print(f"\nengine: {out['engine']} (ran {out['engine_mode']} on "
+          f"{out['n_devices']} device(s))")
+    print("cohort trajectory:", out["cohort_sizes"])
     print("scheduler:", scheduler.summary())
     final = out["history"][-1]
     print(f"final test acc {final.test_acc:.4f} "

@@ -4,4 +4,7 @@ from repro.distributed.sharding import (  # noqa: F401
     param_specs,
     shard_batch_axes,
 )
-from repro.distributed.fedavg_mesh import fedavg_allreduce  # noqa: F401
+from repro.distributed.fedavg_mesh import (  # noqa: F401
+    fedavg_allreduce,
+    weighted_psum_sum,
+)

@@ -22,6 +22,29 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 
+def weighted_psum_sum(weights, stacked, axes: Tuple[str, ...]):
+    """Weighted sum over a sharded leading client dim, reduced with psum.
+
+    Must be called *inside* a ``shard_map`` body.  ``stacked`` is a pytree
+    whose leaves carry a leading local-client dim matching ``weights``
+    (local_clients,); the weighted sum over that dim is reduced locally and
+    then psum'd over the mesh ``axes`` — on hardware a tree all-reduce over
+    ICI/DCN.  Returns ``(summed pytree with the client dim removed,
+    total weight)``, both replicated across ``axes``.  Shared by the
+    cross-silo FedAvg collective below and the sharded fleet engine
+    (``repro.fed.fleet.sharded``), so both aggregate with the same
+    order-stable device-resident reduction.
+    """
+    total_w = jax.lax.psum(jnp.sum(weights), axes)
+
+    def one(leaf):
+        wl = weights.astype(leaf.dtype).reshape(
+            (-1,) + (1,) * (leaf.ndim - 1))
+        return jax.lax.psum(jnp.sum(leaf * wl, axis=0), axes)
+
+    return jax.tree.map(one, stacked), total_w
+
+
 def fedavg_allreduce(local_params, weights, mesh: Mesh,
                      client_axes: Tuple[str, ...] = ("pod", "data")):
     """Weighted FedAvg across the client mesh axes.
@@ -34,13 +57,8 @@ def fedavg_allreduce(local_params, weights, mesh: Mesh,
 
     def agg(w, *leaves):
         # each shard sees (silos_per_shard, ...); reduce locally then psum
-        total_w = jax.lax.psum(jnp.sum(w), axes)
-        out = []
-        for leaf in leaves:
-            wl = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
-            local = jnp.sum(leaf * wl, axis=0)
-            out.append(jax.lax.psum(local, axes) / total_w)
-        return tuple(out)
+        summed, total_w = weighted_psum_sum(w, list(leaves), axes)
+        return tuple(leaf / total_w for leaf in summed)
 
     flat, treedef = jax.tree.flatten(local_params)
     in_specs = (P(axes),) + tuple(

@@ -17,3 +17,7 @@ from repro.fed.fleet.scheduler import (  # noqa: F401
     AdaptiveParticipation,
     ParticipationConfig,
 )
+from repro.fed.fleet.sharded import (  # noqa: F401
+    ShardedFleetEngine,
+    client_mesh,
+)

@@ -136,9 +136,11 @@ def make_cohort_groups(clients_data: Sequence[Dict[str, np.ndarray]],
 
     ``budgets[cid]`` is the client's coreset budget; ``budgets[cid] >= m``
     means full-set training.  Padded size M is the next power-of-two number
-    of batches; coreset budgets are quantized down to a power of two so a
-    group shares one static k (never exceeding any member's deadline
-    budget).  Per-client epoch permutations are drawn from
+    of batches; coreset budgets are quantized down to a power of **four**
+    (``_floor_pow4`` — the coarse ×4 ladder keeps the number of distinct
+    compiled group programs small) so a group shares one static k (never
+    exceeding any member's deadline budget).  Per-client epoch
+    permutations are drawn from
     ``(cfg.seed, round_seed, cid)`` streams: the grouping is a pure
     performance choice and cannot change any client's arithmetic.
     """
@@ -220,6 +222,11 @@ class FleetEngine:
             params, losses = jax.lax.scan(step, params, n_steps_arr)
             return params, losses[-1]
 
+        # raw per-client programs — the sharded engine re-vmaps these
+        # inside its shard_map bodies so all three execution modes share
+        # one copy of the arithmetic
+        self._sgd_scan = sgd_scan
+        self._core_scan = core_scan
         # batched cohort programs
         self._sgd = jax.jit(jax.vmap(sgd_scan))
         self._core = jax.jit(jax.vmap(core_scan))
@@ -342,14 +349,20 @@ class FleetEngine:
                 np.stack(meds) if meds else None)
 
 
-def _aggregate_groups(partials: List[Tuple[Pytree, np.ndarray]]) -> Pytree:
+def _aggregate_groups(partials: List[Tuple[Pytree, np.ndarray]],
+                      fallback: Pytree) -> Pytree:
     """Weighted mean over all cohort clients: Σ_g Σ_c w·p / Σ w.
 
     ``partials`` holds per-group (stacked client params, per-client
     weights).  Group-partial sums keep the reduction order independent of
-    engine choice (batched and loop produce identical stacks).
+    engine choice (batched and loop produce identical stacks).  An empty
+    cohort — or one whose aggregation weights sum to zero — contributes
+    nothing: the round is a no-op and ``fallback`` (the round-start
+    params) is returned unchanged.
     """
     total = sum(float(w.sum()) for _, w in partials)
+    if not partials or total <= 0.0:
+        return fallback
     acc = None
     for stacked, w in partials:
         ws = jnp.asarray(w, jnp.float32)
@@ -360,29 +373,51 @@ def _aggregate_groups(partials: List[Tuple[Pytree, np.ndarray]]) -> Pytree:
     return jax.tree.map(lambda x: x / total, acc)
 
 
+def _cat(parts: List[np.ndarray], dtype) -> np.ndarray:
+    return (np.concatenate(parts).astype(dtype) if parts
+            else np.zeros(0, dtype))
+
+
 def run_fleet_round(engine: FleetEngine, params: Pytree,
                     clients_data: Sequence[Dict[str, np.ndarray]],
                     cids: Sequence[int], budgets: Dict[int, int],
                     round_seed: int = 0, batched: bool = True,
-                    groups: Optional[List[CohortGroup]] = None
+                    groups: Optional[List[CohortGroup]] = None,
+                    mode: Optional[str] = None
                     ) -> Tuple[Pytree, FleetRoundStats]:
     """Execute one cohort round; returns (aggregated params, stats).
 
-    ``groups`` lets callers reuse a prebuilt cohort grouping (it is a pure
-    function of (clients_data, cids, budgets, cfg, round_seed))."""
+    ``mode`` selects the execution model: ``"batched"`` (vmapped cohort
+    programs), ``"loop"`` (per-client reference), or ``"sharded"``
+    (``engine`` must be a ``repro.fed.fleet.sharded.ShardedFleetEngine``;
+    groups run data-parallel over the mesh's client axis with a psum-tree
+    aggregation).  ``mode=None`` derives batched/loop from the legacy
+    ``batched`` flag.  An empty cohort yields the round-start params and
+    zero-length stats.  ``groups`` lets callers reuse a prebuilt cohort
+    grouping (it is a pure function of (clients_data, cids, budgets, cfg,
+    round_seed))."""
     cfg = engine.cfg
+    if mode is None:
+        mode = "batched" if batched else "loop"
+    if mode not in ("batched", "loop", "sharded"):
+        raise ValueError(f"unknown fleet execution mode {mode!r}")
     if groups is None:
         groups = make_cohort_groups(clients_data, cids, budgets, cfg,
                                     round_seed)
     partials = []
-    all_cids, all_m, all_b, all_core, all_work, all_loss = \
-        [], [], [], [], [], []
+    all_cids, all_m, all_b, all_core, all_work, all_loss, all_meds = \
+        [], [], [], [], [], [], []
     medoids: Dict[int, np.ndarray] = {}
     for g in groups:
-        p, losses, meds = engine.run_group(params, g, batched=batched)
         w = (g.m.astype(np.float64) if cfg.weight_by_samples
              else np.ones(g.n_clients))
-        partials.append((p, w))
+        if mode == "sharded":
+            part, wsum, losses, meds = engine.run_group_sharded(params, g, w)
+            partials.append((part, wsum))
+        else:
+            p, losses, meds = engine.run_group(params, g,
+                                               batched=(mode == "batched"))
+            partials.append((p, w))
         all_cids.append(g.cids)
         all_m.append(g.m)
         eff_b = g.m if g.k == 0 else np.full(g.n_clients, g.k)
@@ -392,17 +427,24 @@ def run_fleet_round(engine: FleetEngine, params: Pytree,
                 else g.m + (cfg.epochs - 1) * g.k * np.ones(g.n_clients,
                                                             np.int64))
         all_work.append(work)
-        all_loss.append(losses)
+        all_loss.append(losses)     # device arrays stay lazy until after
+        all_meds.append(meds)       # every group has been dispatched
+    if mode == "sharded":
+        new_params = engine.combine_group_sums(partials, fallback=params)
+    else:
+        new_params = _aggregate_groups(partials, fallback=params)
+    all_loss = [np.asarray(ls) for ls in all_loss]
+    for g, meds in zip(groups, all_meds):
         if meds is not None:
+            meds = np.asarray(meds)
             for cid, med in zip(g.cids, meds):
                 medoids[int(cid)] = med
-    new_params = _aggregate_groups(partials)
     stats = FleetRoundStats(
-        cids=np.concatenate(all_cids), m=np.concatenate(all_m),
-        budgets=np.concatenate(all_b),
-        used_coreset=np.concatenate(all_core),
-        work=np.concatenate(all_work).astype(np.float64),
-        losses=np.concatenate(all_loss), medoids=medoids)
+        cids=_cat(all_cids, np.int64), m=_cat(all_m, np.int64),
+        budgets=_cat(all_b, np.int64),
+        used_coreset=_cat(all_core, bool),
+        work=_cat(all_work, np.float64),
+        losses=_cat(all_loss, np.float64), medoids=medoids)
     return new_params, stats
 
 
@@ -416,22 +458,44 @@ def run_fleet(model, clients_data: Sequence[Dict[str, np.ndarray]],
               verbose: bool = False) -> Dict[str, Any]:
     """Multi-round fleet driver: adaptive cohorts + batched execution.
 
-    ``scheduler`` (an ``AdaptiveParticipation`` or anything with its
-    ``select`` / ``budget`` / ``observe`` / ``record_round`` protocol)
-    picks each round's cohort and conditions coreset budgets on *observed*
-    capability; without one, every client participates with nominal-
-    capability budgets.  ``trace`` perturbs per-round realized durations
-    (slowdown episodes + jitter) exactly as the async runtime does, which
-    is what gives the scheduler something to learn.
+    ``engine`` ∈ {"batched", "loop", "sharded"}: the vmapped cohort
+    programs, the per-client reference loop, or the mesh-sharded engine
+    (``repro.fed.fleet.sharded``) that runs each cohort group
+    data-parallel over every available device.  "sharded" silently falls
+    back to "batched" on a single-device host — the two are numerically
+    interchangeable.  ``scheduler`` (an ``AdaptiveParticipation`` or
+    anything with its ``select`` / ``budget`` / ``observe`` /
+    ``record_round`` protocol) picks each round's cohort and conditions
+    coreset budgets on *observed* capability; without one, every client
+    participates with nominal-capability budgets.  ``trace`` perturbs
+    per-round realized durations (slowdown episodes + jitter) exactly as
+    the async runtime does, which is what gives the scheduler something
+    to learn.  The trace is indexed per-(client, dispatch): each client
+    carries its own dispatch counter, so a client absent for some rounds
+    samples exactly the entries the sync server and async event loop
+    would sample for the same dispatch order.
     """
-    eng = FleetEngine(model, cfg)
+    if engine not in ("batched", "loop", "sharded"):
+        raise ValueError(f"unknown fleet engine {engine!r} "
+                         f"(expected batched | loop | sharded)")
+    mode = engine
+    if engine == "sharded":
+        from repro.fed.fleet.sharded import ShardedFleetEngine, client_mesh
+        if len(jax.devices()) > 1:
+            eng = ShardedFleetEngine(model, cfg, mesh=client_mesh())
+        else:       # one device: sharding is pure overhead
+            eng, mode = FleetEngine(model, cfg), "batched"
+    else:
+        eng = FleetEngine(model, cfg)
     params = (init_params if init_params is not None
               else model.init(jax.random.PRNGKey(cfg.seed)))
     if deadline is None:
         deadline = straggler_deadline(specs, cfg.epochs, straggler_pct)
     cap_trace = CapabilityTrace(trace) if trace is not None else None
     eval_fn = make_eval_fn(model, test_data, 512) if test_data else None
-    batched = engine == "batched"
+    # per-client dispatch counters: the CapabilityTrace is defined per
+    # (client, dispatch), exactly like repro.fed.server / repro.fed.events
+    dispatch_counts = np.zeros(len(specs), np.int64)
 
     history: List[RoundRecord] = []
     cohort_sizes: List[int] = []
@@ -444,20 +508,22 @@ def run_fleet(model, clients_data: Sequence[Dict[str, np.ndarray]],
             cohort = list(range(len(specs)))
             budgets = nominal_budgets(specs, deadline, cfg.epochs)
         params, stats = run_fleet_round(eng, params, clients_data, cohort,
-                                        budgets, round_seed=r,
-                                        batched=batched)
+                                        budgets, round_seed=r, mode=mode)
         durations = []
         for cid, work in zip(stats.cids, stats.work):
             s = specs[cid]
-            c_eff = (cap_trace.capability(s, r) if cap_trace is not None
+            k = int(dispatch_counts[cid])
+            dispatch_counts[cid] += 1
+            c_eff = (cap_trace.capability(s, k) if cap_trace is not None
                      else s.c)
             dur = work / c_eff
             if cap_trace is not None:
-                dur *= cap_trace.jitter(s, r)
+                dur *= cap_trace.jitter(s, k)
             durations.append(dur)
             if scheduler is not None:
                 scheduler.observe(int(cid), float(work), float(dur))
-        train_loss = float(np.mean(stats.losses))
+        train_loss = (float(np.mean(stats.losses)) if stats.losses.size
+                      else float("nan"))
         if scheduler is not None:
             scheduler.record_round(train_loss)
         # honest τ accounting (mirrors ClientResult.deadline_violated):
@@ -465,7 +531,8 @@ def run_fleet(model, clients_data: Sequence[Dict[str, np.ndarray]],
         n_violations = int(sum(d > deadline * (1.0 + 1e-9)
                                for d in durations))
         rec = RoundRecord(
-            round=r, sim_round_time=float(np.max(durations)),
+            round=r,
+            sim_round_time=float(np.max(durations)) if durations else 0.0,
             client_times=[float(d) for d in durations],
             n_participants=len(cohort), n_dropped=0,
             n_coreset=int(stats.used_coreset.sum()), train_loss=train_loss,
@@ -475,7 +542,7 @@ def run_fleet(model, clients_data: Sequence[Dict[str, np.ndarray]],
         history.append(rec)
         cohort_sizes.append(len(cohort))
         if verbose:
-            print(f"[fleet/{engine}] round {r:3d} cohort {len(cohort):5d} "
+            print(f"[fleet/{mode}] round {r:3d} cohort {len(cohort):5d} "
                   f"core {rec.n_coreset:5d} time {rec.sim_round_time:9.1f}s "
                   f"loss {train_loss:.4f} acc {rec.test_acc:.4f}")
 
@@ -483,7 +550,9 @@ def run_fleet(model, clients_data: Sequence[Dict[str, np.ndarray]],
         "params": params,
         "history": history,
         "deadline": deadline,
-        "engine": engine,
+        "engine": engine,          # requested
+        "engine_mode": mode,       # executed (sharded may fall back)
+        "n_devices": len(jax.devices()),
         "cohort_sizes": cohort_sizes,
         "strategy": "fedcore_fleet",
     }

@@ -120,6 +120,7 @@ def run_scenario(name: str, runtime: str, model, clients_data,
                  straggler_pct: float = 30.0,
                  max_updates: Optional[int] = None, concurrency: int = 8,
                  scheduler=None, aggregator=None,
+                 fleet_engine: str = "batched",
                  verbose: bool = False) -> Dict[str, Any]:
     """Drive one named scenario through one runtime.
 
@@ -127,8 +128,10 @@ def run_scenario(name: str, runtime: str, model, clients_data,
     (``run_federated`` with the FedCore strategy), the async event engine
     (``run_federated_async``), or the batched fleet driver (``run_fleet``).
     All three consume the same specs + capability trace from the registry,
-    so a scenario means the same fleet everywhere.  The result dict gains
-    ``scenario`` and ``runtime`` keys.
+    so a scenario means the same fleet everywhere.  ``fleet_engine``
+    selects the fleet execution model ("batched" | "loop" | "sharded" —
+    the mesh-sharded engine, falling back to batched on one device).  The
+    result dict gains ``scenario`` and ``runtime`` keys.
     """
     # late imports: repro.fed.{server,events,strategies} import nothing from
     # fleet, keeping this the only direction of coupling
@@ -165,7 +168,7 @@ def run_scenario(name: str, runtime: str, model, clients_data,
         out = run_fleet(model, clients_data, specs, cfg, rounds=rounds,
                         scheduler=scheduler, trace=trace,
                         straggler_pct=straggler_pct, test_data=test_data,
-                        verbose=verbose)
+                        engine=fleet_engine, verbose=verbose)
     else:
         raise ValueError(f"unknown runtime {runtime!r}")
     out["scenario"] = name

@@ -145,6 +145,7 @@ class FedProx(Strategy):
 
     def local_update(self, global_params, data, spec, deadline, epochs, rng):
         full_t = spec.full_round_time(epochs)
+        violated = False
         if full_t <= deadline:
             steps = None
             sim_t = full_t
@@ -152,14 +153,19 @@ class FedProx(Strategy):
         else:
             samples_budget = spec.c * deadline
             steps = max(1, int(samples_budget // self.trainer.batch_size))
-            sim_t = min(deadline,
-                        steps * self.trainer.batch_size / spec.c)
+            # honest timing: when even one batch exceeds the budget
+            # (cⁱτ < B), the clamped steps=1 plan genuinely overruns τ —
+            # report the true duration and flag the violation, exactly as
+            # FedCore's footnote-2 accounting does, instead of clamping
+            # the reported time to the deadline.
+            sim_t = steps * self.trainer.batch_size / spec.c
+            violated = sim_t > deadline * (1.0 + 1e-9)
             eff_epochs = steps * self.trainer.batch_size / spec.m
         params, _, loss = self.trainer.run_epochs(
             global_params, data, epochs, rng, prox_ref=global_params,
             max_steps=steps)
         return ClientResult(params, spec.m, sim_t, epochs_done=eff_epochs,
-                            final_loss=loss)
+                            final_loss=loss, deadline_violated=violated)
 
 
 class FedCore(Strategy):

@@ -1,0 +1,38 @@
+"""Subprocess environments for forced multi-device CPU runs.
+
+XLA fixes the host-platform device count when jax initializes, so any
+harness that wants to compare device counts (the sharded-fleet scaling
+sweep, the 4-virtual-device parity test) must re-exec itself with
+``--xla_force_host_platform_device_count=N`` set *before* import.  This
+is the one shared builder for that environment, so the flag-rewrite
+rules can't drift between callers.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Dict, Optional
+
+
+def forced_host_device_env(n_devices: int,
+                           repo_root: Optional[str] = None
+                           ) -> Dict[str, str]:
+    """A copy of ``os.environ`` pinned to ``n_devices`` virtual CPU devices.
+
+    Any pre-existing forced device count in ``XLA_FLAGS`` is stripped
+    first (the parent may itself be a forced-device process — e.g. the CI
+    multi-device job).  ``repo_root``, when given, prepends its ``src``
+    directory to ``PYTHONPATH`` so the child can import ``repro`` no
+    matter how the parent was launched.
+    """
+    env = dict(os.environ)
+    flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                   env.get("XLA_FLAGS", ""))
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_devices} "
+        + flags).strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    if repo_root is not None:
+        src = os.path.join(os.path.abspath(repo_root), "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env

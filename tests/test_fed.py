@@ -94,6 +94,34 @@ def test_fedavg_ds_drops_stragglers(small_fl):
     assert sum(r.n_dropped for r in out["history"]) > 0
 
 
+def test_fedprox_sub_batch_overrun_reports_true_time(small_fl):
+    """A FedProx client whose budget cⁱτ is smaller than one batch still
+    trains one clamped batch — it must report the true (over-deadline)
+    duration and flag the violation, not a time clamped to τ."""
+    model, train, _, _, cfg = small_fl
+    trainer = LocalTrainer(model, cfg.lr, cfg.batch_size, prox_mu=0.1)
+    strat = FedProx(trainer)
+    data = train[0]
+    m = len(data["y"])
+    deadline = 4.0
+    spec = ClientSpec(cid=0, m=m, c=1.0)   # cτ = 4 < batch_size = 8
+    res = strat.local_update(model.init(jax.random.PRNGKey(0)), data, spec,
+                             deadline, cfg.epochs, np.random.default_rng(0))
+    true_t = cfg.batch_size / spec.c       # one batch at capability c
+    assert res.sim_time == pytest.approx(true_t)
+    assert res.sim_time > deadline
+    assert res.deadline_violated
+
+    # a straggler whose clamped plan *fits* still reports in-deadline time
+    spec_ok = ClientSpec(cid=1, m=m, c=float(m))  # cτ >> B but < E·m
+    assert spec_ok.full_round_time(cfg.epochs) > deadline
+    res_ok = strat.local_update(model.init(jax.random.PRNGKey(0)), data,
+                                spec_ok, deadline, cfg.epochs,
+                                np.random.default_rng(0))
+    assert res_ok.sim_time <= deadline * (1.0 + 1e-9)
+    assert not res_ok.deadline_violated
+
+
 def test_fedcore_infeasible_client_is_surfaced(small_fl):
     """A client with cⁱτ below even the §4.4 minimal plan must not silently
     pretend to meet τ: the result is flagged (or dropped when opted in)."""

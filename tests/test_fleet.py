@@ -20,7 +20,8 @@ from repro.fed.fleet.batched import (FleetConfig, FleetEngine, _floor_pow4,
 from repro.fed.fleet.scenarios import SCENARIOS, build_scenario, run_scenario
 from repro.fed.fleet.scheduler import (AdaptiveParticipation,
                                        ParticipationConfig)
-from repro.fed.simulator import (ClientSpec, make_client_specs,
+from repro.fed.fleet.sharded import ShardedFleetEngine, client_mesh
+from repro.fed.simulator import (ClientSpec, TraceConfig, make_client_specs,
                                  straggler_deadline)
 from repro.kernels.ops import pairwise_l2, pairwise_l2_batched
 from repro.models.small import LogisticRegression
@@ -101,6 +102,33 @@ def test_pow_helpers():
         [1, 1, 4, 4, 16, 64]
 
 
+def test_floor_pow4_ladder_and_group_keys():
+    """Budget quantization is a power-of-FOUR ladder (what the
+    make_cohort_groups docstring promises), and group keys quantize member
+    budgets with it — never exceeding any member's true budget."""
+    # every rung of the ladder up to 4^5
+    for e in range(6):
+        lo, hi = 4 ** e, 4 ** (e + 1)
+        for n in (lo, lo + 1, hi - 1):
+            assert _floor_pow4(n) == lo, n
+        assert _floor_pow4(hi) == hi
+    # pow2-but-not-pow4 values round DOWN to the pow4 below
+    assert [_floor_pow4(n) for n in (2, 8, 32, 128)] == [1, 4, 16, 64]
+
+    # group keys: m=24 pads to 32 (next pow2 of 3 batches x B=8); budgets
+    # 9 and 20 quantize to the (32, 4)/(32, 16) buckets; b >= m means k=0
+    data = [{"x": np.zeros((24, 2), np.float32),
+             "y": np.zeros(24, np.int32)} for _ in range(3)]
+    cfg = FleetConfig(epochs=1, batch_size=8, seed=0)
+    budgets = {0: 9, 1: 20, 2: 24}
+    groups = make_cohort_groups(data, [0, 1, 2], budgets, cfg, 0)
+    keys = {(g.valid.shape[1], g.k): g.cids.tolist() for g in groups}
+    assert keys == {(32, 4): [0], (32, 16): [1], (32, 0): [2]}
+    for g in groups:
+        for cid in g.cids:
+            assert g.k <= budgets[cid] or g.k == 0
+
+
 def test_cohort_groups_partition_and_pad(fleet_fl):
     _, train, _, specs = fleet_fl
     cfg = FleetConfig(epochs=2, batch_size=16, seed=0)
@@ -159,6 +187,101 @@ def test_batched_engine_matches_per_client_loop(fleet_fl):
     np.testing.assert_allclose(sb.losses, sl.losses, atol=1e-5)
 
 
+class _ScriptedScheduler:
+    """Minimal select/budget/observe/record_round scheduler driving a
+    fixed per-round cohort script."""
+
+    def __init__(self, cohorts, specs):
+        self.cohorts = list(cohorts)
+        self.specs = specs
+        self.observed = []
+        self._r = 0
+
+    def select(self):
+        cohort = self.cohorts[min(self._r, len(self.cohorts) - 1)]
+        self._r += 1
+        return np.asarray(cohort, np.int64)
+
+    def budget(self, cid, deadline, epochs):
+        return self.specs[cid].m    # full-set training for everyone
+
+    def observe(self, cid, work, duration):
+        self.observed.append((cid, work, duration))
+
+    def record_round(self, train_loss):
+        pass
+
+
+def test_empty_cohort_round_is_noop(fleet_fl):
+    """A scheduler may select an empty cohort (e.g. every candidate
+    infeasible): the round must keep the previous params and record zero
+    participants instead of crashing on an empty aggregation."""
+    model, train, _, specs = fleet_fl
+    cfg = FleetConfig(epochs=2, batch_size=16, seed=0)
+    engine = FleetEngine(model, cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # direct round-level check: params pass through bit-identically
+    p2, stats = run_fleet_round(engine, params, train, [], {}, round_seed=0)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert stats.cids.size == 0 and stats.losses.size == 0
+    assert stats.medoids == {}
+
+    # driver-level: an empty middle round yields a zero-participant record
+    sched = _ScriptedScheduler([[0, 1], [], [0, 1]], specs)
+    out = run_fleet(model, train, specs, cfg, rounds=3, scheduler=sched)
+    rec = out["history"][1]
+    assert rec.n_participants == 0
+    assert rec.sim_round_time == 0.0 and rec.client_times == []
+    assert np.isnan(rec.train_loss)
+    # surrounding rounds still train
+    assert out["history"][0].n_participants == 2
+    assert out["history"][2].n_participants == 2
+
+
+def test_fleet_trace_indexed_per_client_dispatch(fleet_fl):
+    """The CapabilityTrace is defined per (client, dispatch): a client
+    absent for some rounds must draw its *next* trace entry on return,
+    exactly as the sync server and async event loop index it — not the
+    round number (the old bug)."""
+    from repro.fed.simulator import CapabilityTrace
+
+    model, train, _, specs = fleet_fl
+    cfg = FleetConfig(epochs=2, batch_size=16, seed=0)
+    tc = TraceConfig(jitter_std=0.3, slowdown_prob=0.5,
+                     slowdown_factor=4.0, seed=7)
+    # client 0 participates every round; client 1 skips rounds 1-2
+    cohorts = [[0, 1], [0], [0], [0, 1]]
+    sched = _ScriptedScheduler(cohorts, specs)
+    out = run_fleet(model, train, specs, cfg, rounds=4, scheduler=sched,
+                    trace=tc)
+
+    # reference: a fresh trace indexed by per-client dispatch counts —
+    # the indexing contract shared with events.py (dispatch_counts) and
+    # server.py; same (seed, cid, index) => identical draws everywhere
+    ref = CapabilityTrace(tc)
+    counts = {cid: 0 for cid in range(len(specs))}
+    for r, cohort in enumerate(cohorts):
+        rec = out["history"][r]
+        assert rec.n_participants == len(cohort)
+        expect = []
+        for cid in cohort:
+            k = counts[cid]
+            counts[cid] += 1
+            s = specs[cid]
+            work = cfg.epochs * s.m      # full-set budgets (see scheduler)
+            expect.append(work / ref.capability(s, k) * ref.jitter(s, k))
+        # client_times follow cohort-group order; compare as multisets
+        np.testing.assert_allclose(sorted(rec.client_times), sorted(expect),
+                                   rtol=1e-12)
+    # client 1's second appearance (round 3) drew dispatch index 1; the
+    # old code indexed by round number and would have drawn entry 3
+    s1 = specs[1]
+    assert (ref.capability(s1, 1), ref.jitter(s1, 1)) != \
+        (ref.capability(s1, 3), ref.jitter(s1, 3))
+
+
 def test_run_fleet_deterministic_and_trace_sensitive(fleet_fl):
     model, train, test, specs = fleet_fl
     _, trace = build_scenario("flash_crowd", [s.m for s in specs], seed=0)
@@ -176,6 +299,55 @@ def test_run_fleet_deterministic_and_trace_sensitive(fleet_fl):
     # the trace perturbs durations relative to a no-trace run
     c = run_fleet(model, train, specs, cfg, rounds=2, test_data=test)
     assert a["history"][0].client_times != c["history"][0].client_times
+
+
+# ---------------------------------------------------------------------------
+# sharded engine (single-device mesh; the 4-virtual-device parity run
+# lives in test_fleet_sharded.py)
+# ---------------------------------------------------------------------------
+
+def test_sharded_engine_matches_batched(fleet_fl):
+    """shard_map execution + psum-tree aggregation reproduce the batched
+    engine: identical medoids, params within float32 tolerance.  On one
+    device this exercises the full sharded code path (placement,
+    padding, psum) without cross-device splits."""
+    model, train, _, specs = fleet_fl
+    cfg = FleetConfig(epochs=3, batch_size=16, lr=0.05, seed=0)
+    deadline = straggler_deadline(specs, cfg.epochs, 40.0)
+    budgets = nominal_budgets(specs, deadline, cfg.epochs)
+    params = model.init(jax.random.PRNGKey(0))
+    cids = list(range(len(specs)))
+    pb, sb = run_fleet_round(FleetEngine(model, cfg), params, train, cids,
+                             budgets, round_seed=0, mode="batched")
+    eng = ShardedFleetEngine(model, cfg, mesh=client_mesh())
+    ps, ss = run_fleet_round(eng, params, train, cids, budgets,
+                             round_seed=0, mode="sharded")
+    assert sb.used_coreset.sum() > 0
+    for a, b in zip(jax.tree.leaves(pb), jax.tree.leaves(ps)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    assert set(sb.medoids) == set(ss.medoids)
+    for cid in sb.medoids:
+        np.testing.assert_array_equal(sb.medoids[cid], ss.medoids[cid])
+    np.testing.assert_allclose(sb.losses, ss.losses, atol=1e-5)
+
+
+def test_run_fleet_sharded_engine_option(fleet_fl):
+    """run_fleet(engine="sharded") matches the batched driver end to end
+    (on one device it falls back to the batched path; on a multi-device
+    host it runs the mesh engine — either way the history must agree)."""
+    model, train, test, specs = fleet_fl
+    cfg = FleetConfig(epochs=2, batch_size=16, seed=0)
+    a = run_fleet(model, train, specs, cfg, rounds=2, test_data=test,
+                  engine="sharded")
+    b = run_fleet(model, train, specs, cfg, rounds=2, test_data=test,
+                  engine="batched")
+    assert a["engine"] == "sharded"
+    assert a["engine_mode"] == ("batched" if a["n_devices"] == 1
+                                else "sharded")
+    for ra, rb in zip(a["history"], b["history"]):
+        assert ra.n_participants == rb.n_participants
+        np.testing.assert_allclose(ra.train_loss, rb.train_loss, atol=1e-5)
+        np.testing.assert_allclose(ra.test_acc, rb.test_acc, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

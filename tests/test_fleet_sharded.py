@@ -1,0 +1,107 @@
+"""Multi-device parity tests for the sharded fleet engine.
+
+The sharded engine must match the batched engine bit-for-bit on medoid
+choices and within float32 tolerance on aggregated params when cohort
+groups are actually *split* across devices — padding lanes, per-device
+k-medoids convergence, and the cross-device psum all engaged.  CPU hosts
+expose multiple XLA devices only via ``--xla_force_host_platform_
+device_count``, which must be set before jax initializes; when this test
+process already has >= 4 devices (the CI multi-device job) the checks
+run in-process, otherwise the module re-execs itself as a 4-device
+subprocess and asserts on its report.
+"""
+import json
+import os
+import subprocess
+import sys
+
+from repro.utils.xla_env import forced_host_device_env
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_DEVICES = 4
+
+
+def _parity_payload():
+    """Run sharded-vs-batched parity on this process's devices."""
+    import jax
+    import numpy as np
+
+    from repro.data.partition import train_test_split_clients
+    from repro.data.synthetic import synthetic_dataset
+    from repro.fed.fleet.batched import (FleetConfig, FleetEngine,
+                                         make_cohort_groups,
+                                         nominal_budgets, run_fleet_round)
+    from repro.fed.fleet.scenarios import build_scenario
+    from repro.fed.fleet.sharded import ShardedFleetEngine, client_mesh
+    from repro.fed.simulator import straggler_deadline
+
+    from repro.models.small import LogisticRegression
+
+    # 18 clients: group sizes won't divide the device count evenly, so
+    # zero-weight padding lanes are exercised alongside real splits
+    clients = synthetic_dataset(0.5, 0.5, n_clients=18, mean_samples=60,
+                                std_samples=40, seed=3)
+    train, _ = train_test_split_clients(clients)
+    sizes = [len(d["y"]) for d in train]
+    specs, _ = build_scenario("device_classes", sizes, seed=3)
+    model = LogisticRegression()
+    cfg = FleetConfig(epochs=3, batch_size=16, lr=0.05, seed=0)
+    deadline = straggler_deadline(specs, cfg.epochs, 40.0)
+    budgets = nominal_budgets(specs, deadline, cfg.epochs)
+    params = model.init(jax.random.PRNGKey(0))
+    cids = list(range(len(specs)))
+    groups = make_cohort_groups(train, cids, budgets, cfg, round_seed=0)
+
+    pb, sb = run_fleet_round(FleetEngine(model, cfg), params, train, cids,
+                             budgets, round_seed=0, mode="batched",
+                             groups=groups)
+    eng = ShardedFleetEngine(model, cfg, mesh=client_mesh())
+    ps, ss = run_fleet_round(eng, params, train, cids, budgets,
+                             round_seed=0, mode="sharded", groups=groups)
+
+    diff = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+               for a, b in zip(jax.tree.leaves(pb), jax.tree.leaves(ps)))
+    return {
+        "n_devices": len(jax.devices()),
+        "mesh_devices": int(eng.n_devices),
+        "n_groups": len(groups),
+        "n_coreset_clients": int(sb.used_coreset.sum()),
+        "max_param_diff": diff,
+        "losses_max_diff": float(np.max(np.abs(sb.losses - ss.losses))),
+        "medoid_cids_equal": sorted(sb.medoids) == sorted(ss.medoids),
+        "medoids_equal": bool(
+            sorted(sb.medoids) == sorted(ss.medoids) and all(
+                np.array_equal(sb.medoids[c], ss.medoids[c])
+                for c in sb.medoids)),
+    }
+
+
+def _subprocess_payload():
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--worker"],
+        env=forced_host_device_env(N_DEVICES, REPO),
+        capture_output=True, text=True, timeout=600)
+    line = next((ln for ln in proc.stdout.splitlines()
+                 if ln.startswith("PARITY:")), None)
+    assert proc.returncode == 0 and line is not None, \
+        f"worker failed:\n{proc.stdout}\n{proc.stderr}"
+    return json.loads(line[len("PARITY:"):])
+
+
+def test_sharded_matches_batched_on_four_devices():
+    import jax
+    payload = (_parity_payload() if len(jax.devices()) >= N_DEVICES
+               else _subprocess_payload())
+    assert payload["n_devices"] >= N_DEVICES     # the mesh really split
+    assert payload["mesh_devices"] >= N_DEVICES
+    assert payload["n_coreset_clients"] > 0      # Alg. 1 path exercised
+    assert payload["medoids_equal"]              # bit-identical choices
+    assert payload["max_param_diff"] < 1e-5      # float32 sum-order tol
+    assert payload["losses_max_diff"] < 1e-5
+
+
+if __name__ == "__main__":
+    if "--worker" in sys.argv:
+        print("PARITY:" + json.dumps(_parity_payload()))
+    else:
+        print(json.dumps(_subprocess_payload(), indent=2))
