@@ -1,15 +1,16 @@
 PY ?= python
 
 .PHONY: test ci bench-async bench-fleet bench-fleet-smoke \
-	bench-fleet-sharded
+	bench-fleet-sharded bench-selection
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-# CI entry point: CPU-pinned tier-1 suite + the fleet smoke sweep
+# CI entry point: CPU-pinned tier-1 suite + the fleet + selection smokes
 ci:
 	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) -m pytest -x -q
 	$(MAKE) bench-fleet-smoke
+	$(MAKE) bench-selection
 
 bench-async:
 	PYTHONPATH=src $(PY) benchmarks/async_vs_sync.py --mode smoke
@@ -19,10 +20,21 @@ bench-fleet:
 	PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py
 
 # CI-sized sweep; --min-speedup 3 is the keep-green regression floor
-# (the tracked BENCH_fleet.json reports the real number, >= 5x locally)
+# (the tracked BENCH_fleet.json reports the real number, >= 5x locally);
+# the selection section runs in its own bench-selection target
 bench-fleet-smoke:
 	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
-		--smoke --min-speedup 3
+		--smoke --min-speedup 3 --skip-selection
+
+# selection-phase smoke: the fused single-dispatch Δ-sweep fast path vs
+# the pre-fusion 3-dispatch chain at 1024 clients, plus the Pallas-kernel
+# on/off A-B.  --min-selection-speedup 1 is the keep-green no-regression
+# floor (the tracked BENCH_fleet.json records the real number, >= 1.5x);
+# gates on fused == pre-fusion medoid parity either way
+bench-selection:
+	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
+		--smoke --skip-engine --skip-scenarios \
+		--min-selection-speedup 1.0
 
 # sharded-engine scaling sweep: one subprocess per device count (XLA
 # forced host-platform devices on CPU); gates on sharded==batched parity
@@ -32,5 +44,5 @@ bench-fleet-smoke:
 # target needs a >=4-core host or real accelerators)
 bench-fleet-sharded:
 	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
-		--smoke --skip-engine --skip-scenarios --device-sweep 1,2,4 \
-		--min-scaling 1.0
+		--smoke --skip-engine --skip-scenarios --skip-selection \
+		--device-sweep 1,2,4 --min-scaling 1.0

@@ -11,12 +11,21 @@ Two measurements in one harness:
    tolerance); the report is clients/sec, virtual round makespan, and the
    batched-over-loop wall-clock speedup (target: ≥ 5×).
 
-2. **Scenario sweep** — every named heterogeneity regime from
+2. **Selection-phase breakdown** — the coreset-selection pipeline
+   (features → distance stack → k-medoids) over every straggler group
+   of the same cohort, fused single-dispatch program (Δ-sweep fast
+   path) vs the pre-fusion 3-dispatch chain, plus a Pallas-kernel
+   on/off A-B on the fused path.  Records ``selection_wall_s``,
+   dispatches-per-group, and the kernel A/B under
+   ``BENCH_fleet.json["selection"]``; gates on fused == baseline
+   medoids and ``--min-selection-speedup``.
+
+3. **Scenario sweep** — every named heterogeneity regime from
    ``repro.fed.fleet.scenarios`` driven through BOTH the synchronous
    server and the async event runtime at smoke scale, so regressions in
    either path show up as a changed loss/makespan row.
 
-3. **Sharded device sweep** (``--device-sweep 1,2,4``) — the mesh-sharded
+4. **Sharded device sweep** (``--device-sweep 1,2,4``) — the mesh-sharded
    engine (``repro.fed.fleet.sharded``) timed at increasing device
    counts on the same fleet, one subprocess per count (XLA fixes the
    host-platform device count at import, so each point re-execs this
@@ -37,6 +46,7 @@ the perf trajectory is tracked in-repo.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import subprocess
@@ -66,10 +76,11 @@ def _max_param_diff(a, b) -> float:
                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
-def bench_engine(n_clients: int, epochs: int, batch_size: int,
-                 seed: int = 0, use_kernel: bool = False,
-                 verbose: bool = False) -> Dict:
-    """Time one identical 1024-client round through both engines."""
+def _engine_workload(n_clients: int, epochs: int, batch_size: int,
+                     seed: int, use_kernel):
+    """Shared builder for the engine/selection benchmarks: the 1024-client
+    device-class fleet, its cohort grouping (timed — the round driver runs
+    it once per round either way), and the round-start params."""
     clients = synthetic_dataset(0.5, 0.5, n_clients=n_clients,
                                 mean_samples=48.0, std_samples=32.0,
                                 seed=seed)
@@ -81,17 +92,105 @@ def bench_engine(n_clients: int, epochs: int, batch_size: int,
                       seed=seed, use_kernel=use_kernel)
     deadline = straggler_deadline(specs, cfg.epochs, 30.0)
     budgets = nominal_budgets(specs, deadline, cfg.epochs)
-    engine = FleetEngine(model, cfg)
     params = model.init(jax.random.PRNGKey(seed))
-    cids = list(range(len(specs)))
-
-    # cohort grouping is identical input prep for both engines (the round
-    # driver runs it once either way) — build it once, report it
-    # separately, and time *engine execution*: run every group through
-    # run_group + aggregate, exactly what run_fleet_round executes
     t0 = time.perf_counter()
-    groups = make_cohort_groups(train, cids, budgets, cfg, round_seed=0)
+    groups = make_cohort_groups(train, list(range(len(specs))), budgets,
+                                cfg, round_seed=0)
     prep_s = time.perf_counter() - t0
+    return model, train, specs, cfg, budgets, params, groups, prep_s
+
+
+def bench_selection(n_clients: int, epochs: int, batch_size: int,
+                    seed: int = 0, use_kernel=None, reps: int = 3,
+                    verbose: bool = False) -> Dict:
+    """Selection-phase breakdown: fused single-dispatch program vs the
+    pre-fusion 3-dispatch chain, plus a Pallas-kernel on/off A-B.
+
+    "Selection" is the straggler path's feature → distance-stack →
+    k-medoids pipeline over every coreset group of one cohort round.  The
+    fused path runs it as one jitted program per group (Δ-sweep fast
+    path); the unfused baseline replays the dispatch chain this PR
+    replaced (jitted feature pass, jitted pairwise program, eager
+    diagonal fix-up, jitted legacy-sweep solve).  Warm wall clocks are
+    min-over-reps; parity requires identical medoid indices.
+    """
+    from repro.kernels.ops import resolve_use_kernel
+    model, _, _, cfg, _, params, groups, _ = _engine_workload(
+        n_clients, epochs, batch_size, seed, use_kernel)
+    sgroups = [g for g in groups if g.k > 0]
+    if not sgroups:
+        raise RuntimeError("selection benchmark found no straggler groups")
+
+    def run(engine, fused):
+        outs = [engine.select_group_coresets(params, g, fused=fused)[0]
+                for g in sgroups]
+        jax.block_until_ready([o.indices for o in outs])
+        return outs
+
+    def timed(engine, fused, tag):
+        t0 = time.perf_counter()
+        outs = run(engine, fused)
+        dt = time.perf_counter() - t0
+        if verbose:
+            print(f"  [{'fused' if fused else 'chain'}] {tag:9s} {dt:8.3f}s")
+        return outs, dt
+
+    def measure(engine, fused, tag):
+        outs, cold = timed(engine, fused, f"{tag}/cold")
+        warm = min(timed(engine, fused, f"{tag}/warm{i}")[1]
+                   for i in range(reps))
+        return outs, cold, warm
+
+    engine = FleetEngine(model, cfg)
+    outs_fused, cold_f, warm_f = measure(engine, True, "auto")
+    outs_chain, cold_u, warm_u = measure(engine, False, "legacy")
+    meds_equal = all(
+        np.array_equal(np.asarray(a.indices), np.asarray(b.indices))
+        for a, b in zip(outs_fused, outs_chain))
+
+    # kernel A-B on the fused path (forced on = interpret mode off-TPU)
+    ab = {}
+    for label, uk in (("on", True), ("off", False)):
+        eng = FleetEngine(model, dataclasses.replace(cfg, use_kernel=uk))
+        _, _, ab[label] = measure(eng, True, f"kernel-{label}")
+
+    return {
+        "n_clients": n_clients,
+        "epochs": epochs,
+        "n_straggler_groups": len(sgroups),
+        "n_coreset_clients": int(sum(g.n_clients for g in sgroups)),
+        "budgets_k": sorted({g.k for g in sgroups}),
+        "use_kernel_mode": {None: "auto", True: "on",
+                            False: "off"}[use_kernel],
+        "use_kernel_resolved": resolve_use_kernel(use_kernel),
+        "selection_wall_s": warm_f,
+        "selection_unfused_wall_s": warm_u,
+        "selection_cold_wall_s": cold_f,
+        "selection_unfused_cold_wall_s": cold_u,
+        "selection_speedup": warm_u / warm_f,
+        "dispatches_per_group_fused": 1,
+        "dispatches_per_group_unfused": 3,
+        "kernel_ab": {"fused_kernel_on_wall_s": ab["on"],
+                      "fused_kernel_off_wall_s": ab["off"],
+                      # > 1 means forcing the kernels on is slower (on CPU
+                      # "on" = interpret mode, which is why auto picks off)
+                      "on_over_off_wall_ratio": ab["on"] / ab["off"]},
+        "parity_medoids_equal": bool(meds_equal),
+    }
+
+
+def bench_engine(n_clients: int, epochs: int, batch_size: int,
+                 seed: int = 0, use_kernel=None,
+                 verbose: bool = False) -> Dict:
+    """Time one identical 1024-client round through both engines."""
+    # identical workload to bench_selection (one shared builder), with the
+    # cohort grouping prep reported separately; what's timed here is
+    # *engine execution*: every group through run_group + aggregate,
+    # exactly what run_fleet_round executes
+    model, train, specs, cfg, budgets, params, groups, prep_s = \
+        _engine_workload(n_clients, epochs, batch_size, seed, use_kernel)
+    engine = FleetEngine(model, cfg)
+    cids = list(range(len(specs)))
 
     def timed(batched: bool, tag: str):
         t0 = time.perf_counter()
@@ -282,11 +381,20 @@ def main(argv=None) -> int:
     ap.add_argument("--epochs", type=int, default=None)
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--use-kernel", action="store_true",
-                    help="route distance stacks through the Pallas kernel")
+    ap.add_argument("--use-kernel", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="tri-state Pallas switch for the selection fast "
+                         "path: auto = kernels on supported backends, jnp "
+                         "fallback otherwise (FleetConfig.use_kernel)")
     ap.add_argument("--skip-scenarios", action="store_true")
     ap.add_argument("--skip-engine", action="store_true")
+    ap.add_argument("--skip-selection", action="store_true",
+                    help="skip the selection-phase breakdown benchmark")
     ap.add_argument("--min-speedup", type=float, default=5.0)
+    ap.add_argument("--min-selection-speedup", type=float, default=1.5,
+                    help="fail if the fused selection path is not at least "
+                         "this much faster than the pre-fusion dispatch "
+                         "chain (1.0 = no-regression keep-green gate)")
     ap.add_argument("--device-sweep", default="",
                     help="comma-separated device counts for the sharded "
                          "engine scaling sweep (e.g. 1,2,4); each count "
@@ -312,6 +420,7 @@ def main(argv=None) -> int:
 
     n_clients = args.clients or 1024
     epochs = args.epochs or (2 if args.smoke else 3)
+    use_kernel = {"auto": None, "on": True, "off": False}[args.use_kernel]
     report = {"mode": "smoke" if args.smoke else "full",
               "backend": jax.default_backend()}
     ok = True
@@ -320,7 +429,7 @@ def main(argv=None) -> int:
         print(f"== engine: one {n_clients}-client round, "
               f"batched vs per-client loop")
         eng = bench_engine(n_clients, epochs, args.batch_size,
-                           seed=args.seed, use_kernel=args.use_kernel,
+                           seed=args.seed, use_kernel=use_kernel,
                            verbose=True)
         report["engine"] = eng
         print(f"  clients/sec (batched): {eng['clients_per_sec']:10.1f}")
@@ -337,6 +446,33 @@ def main(argv=None) -> int:
         print(f"  [{'PASS' if fast else 'FAIL'}] speedup "
               f"{eng['speedup']:.1f}x >= {args.min_speedup:.1f}x")
         ok = ok and parity and fast
+
+    if not args.skip_selection:
+        print(f"\n== selection: coreset-selection phase at {n_clients} "
+              f"clients, fused single-dispatch vs pre-fusion chain "
+              f"(kernels: {args.use_kernel})")
+        sel = bench_selection(n_clients, epochs, args.batch_size,
+                              seed=args.seed, use_kernel=use_kernel,
+                              verbose=args.verbose)
+        report["selection"] = sel
+        print(f"  {sel['n_coreset_clients']} coreset clients in "
+              f"{sel['n_straggler_groups']} groups, k in "
+              f"{sel['budgets_k']}")
+        print(f"  wall: fused {sel['selection_wall_s']:.3f}s "
+              f"({sel['dispatches_per_group_fused']} dispatch/group)  "
+              f"chain {sel['selection_unfused_wall_s']:.3f}s "
+              f"({sel['dispatches_per_group_unfused']} dispatches/group)")
+        print(f"  kernel A/B (fused): on "
+              f"{sel['kernel_ab']['fused_kernel_on_wall_s']:.3f}s  off "
+              f"{sel['kernel_ab']['fused_kernel_off_wall_s']:.3f}s")
+        sel_parity = sel["parity_medoids_equal"]
+        print(f"  [{'PASS' if sel_parity else 'FAIL'}] parity: fused "
+              f"medoids == pre-fusion chain medoids")
+        sel_fast = sel["selection_speedup"] >= args.min_selection_speedup
+        print(f"  [{'PASS' if sel_fast else 'FAIL'}] selection speedup "
+              f"{sel['selection_speedup']:.2f}x >= "
+              f"{args.min_selection_speedup:.1f}x")
+        ok = ok and sel_parity and sel_fast
 
     if not args.skip_scenarios:
         sc_clients = 24 if args.smoke else 64
@@ -379,9 +515,9 @@ def main(argv=None) -> int:
                 merged = json.load(f)
         except (OSError, json.JSONDecodeError):
             merged = {}
-        if args.skip_engine and args.skip_scenarios and "mode" in merged:
+        if args.skip_engine and "mode" in merged:
             # a sections-only run must not relabel the mode that produced
-            # the engine/scenario numbers already in the file
+            # the headline engine numbers already in the file
             report.pop("mode", None)
         merged.update(report)
         report = merged

@@ -49,14 +49,17 @@ def needs_coreset(m: int, capability: float, deadline: float,
 
 
 def build_coreset(features: jnp.ndarray, budget: int, *,
-                  backend: str = "jax", use_kernel: bool = False,
+                  backend: str = "jax", use_kernel: Optional[bool] = None,
                   max_sweeps: int = 50,
                   projection_dim: Optional[int] = None) -> Coreset:
     """Solve Eq.(5) on the given per-sample feature matrix (m, F).
 
     Distances are Euclidean in feature space — exactly d̃ (input features) or
     d̂ (last-layer gradient features) depending on what the caller passes.
-    ``projection_dim`` applies a JL random projection first (§Perf H3).
+    ``use_kernel`` is the tri-state Pallas switch (None = auto: kernels on
+    supported backends, jnp fallback otherwise) for both the pairwise
+    distances and the fused k-medoids reductions.  ``projection_dim``
+    applies a JL random projection first (§Perf H3).
     """
     m = features.shape[0]
     budget = min(budget, m)
@@ -68,7 +71,8 @@ def build_coreset(features: jnp.ndarray, budget: int, *,
     if backend == "numpy":
         res = kmedoids_numpy(np.asarray(D), budget, max_sweeps=max_sweeps)
     else:
-        res = kmedoids_jax(D, budget, max_sweeps=max_sweeps)
+        res = kmedoids_jax(D, budget, max_sweeps=max_sweeps,
+                           use_kernel=use_kernel)
     return Coreset(indices=res.medoids,
                    weights=res.weights.astype(jnp.float32),
                    objective=res.objective,
@@ -76,7 +80,7 @@ def build_coreset(features: jnp.ndarray, budget: int, *,
 
 
 def build_coreset_batched(features: jnp.ndarray, valid: jnp.ndarray,
-                          budget: int, *, use_kernel: bool = False,
+                          budget: int, *, use_kernel: Optional[bool] = None,
                           max_sweeps: int = 50) -> Coreset:
     """One coreset per client over a padded cohort stack (fleet engine).
 
@@ -85,16 +89,19 @@ def build_coreset_batched(features: jnp.ndarray, valid: jnp.ndarray,
     k (clients are grouped by quantized budget upstream).  Returns a
     ``Coreset`` of stacked fields — indices (C, k), weights (C, k), etc.
     Each lane solves exactly the instance ``build_coreset`` would solve on
-    that client's unpadded features.
+    that client's unpadded features.  ``use_kernel`` (tri-state, None =
+    auto by backend) routes the distance stack and the fused BUILD/Δ-sweep
+    reductions through the Pallas kernels.
     """
-    from repro.kernels.ops import pairwise_l2_batched
+    from repro.kernels.ops import pairwise_l2_batched, resolve_use_kernel
     c, m, _ = features.shape
     budget = min(budget, m)
-    D = pairwise_l2_batched(features, squared=False,
-                            use_kernel=use_kernel)
-    # exact zeros on each client's self-distance diagonal
-    D = D * (1.0 - jnp.eye(m, dtype=D.dtype))[None]
-    res = kmedoids_batched(D, valid, budget, max_sweeps=max_sweeps)
+    uk = resolve_use_kernel(use_kernel)
+    # zero_diag: the pairwise wrappers own the self-distance diagonal fix-up
+    D = pairwise_l2_batched(features, squared=False, use_kernel=uk,
+                            zero_diag=True)
+    res = kmedoids_batched(D, valid, budget, max_sweeps=max_sweeps,
+                           use_kernel=uk)
     return Coreset(indices=res.medoids,
                    weights=res.weights.astype(jnp.float32),
                    objective=res.objective,
@@ -136,7 +143,9 @@ class FedCoreConfig:
     epochs: int = 10             # E
     deadline: Optional[float] = None  # τ (seconds); None = no deadline
     backend: str = "jax"         # kmedoids solver
-    use_kernel: bool = False     # pairwise distances via Pallas kernel
+    # tri-state Pallas switch: None = auto (kernels on supported backends,
+    # jnp fallback otherwise); True/False force on/off
+    use_kernel: Optional[bool] = None
     max_sweeps: int = 50
     refresh_every_round: bool = True  # paper: re-select each round
     projection_dim: Optional[int] = None  # JL projection (§Perf H3)

@@ -5,13 +5,16 @@ Two implementations of the same (BUILD + PAM-objective SWAP) algorithm:
 * ``kmedoids_numpy``  — host-side, loops until convergence.  Serves as the
   exactness oracle and matches the paper's FasterPAM usage (the swap step
   evaluates the full FasterPAM Δ(j, l) table each sweep, vectorized).
-* ``kmedoids_jax``    — the TPU-native adaptation: identical dense math
-  expressed as jnp ops inside ``lax.while_loop`` so selection runs on-device
-  next to the gradient features (no host round-trip).  Data-dependent
-  early-exit is preserved via the loop predicate.
+* ``kmedoids_batched`` — the TPU-native adaptation and the fleet engine's
+  hot path: identical dense math over a whole (C, M, M) cohort distance
+  stack inside one ``lax.while_loop`` (data-dependent early exit via the
+  any-lane-still-improving predicate; converged lanes are fixed points of
+  the sweep, so each lane's result equals its standalone solve).
+  ``kmedoids_masked`` / ``kmedoids_jax`` are the C = 1 (and additionally
+  all-valid) views of the same solver — one copy of the Δ-table math.
 
-Both take a precomputed (m, m) distance matrix ``D`` and a budget ``k`` and
-return (medoid indices (k,), assignment (m,), objective scalar).
+Both take precomputed distances and a budget ``k`` and return (medoid
+indices, assignment, cluster-size weights, objective).
 
 Swap Δ derivation (FasterPAM, Schubert & Rousseeuw 2021): with d1/d2 the
 nearest/second-nearest medoid distance of each point and n(i) the nearest
@@ -19,16 +22,23 @@ medoid index,
 
     Δ(j, l) = Σ_i [ n(i)=l ? min(D[i,j], d2_i) − d1_i : min(D[i,j] − d1_i, 0) ]
             = A_j + B_{j,l}
-    A_j     = Σ_i min(D[i,j] − d1_i, 0)
-    B_{j,l} = Σ_{i: n(i)=l} ( min(D[i,j], d2_i) − d1_i − min(D[i,j] − d1_i, 0) )
+    A_j     = Σ_i ( min(D[i,j], d1_i) − d1_i )
+    B_{j,l} = Σ_{i: n(i)=l} ( clip(D[i,j], d1_i, d2_i) − d1_i )
 
-so one sweep is two dense (m, m) reductions plus a segment-sum — MXU/VPU
-friendly, no data-dependent gather loops.
+(the clip form collapses the textbook ``min(D, d2) − d1 − min(D − d1, 0)``
+case split — bitwise equal for d1 ≤ d2).  One sweep is therefore a single
+pass over D producing a dense (m,) + (m, k) pair; the fused Pallas kernel
+(``repro.kernels.kmedoids_pallas.delta_sweep_pallas``) computes both
+reductions tile-by-tile, and ``repro.kernels.ref.kmedoids_delta_sweep_ref``
+is the identical-math jnp fallback.  ``legacy_sweep=True`` keeps the
+pre-fusion ``minimum``/``one_hot``/``einsum`` chain (3+ full O(M²) passes
+per sweep) as the measured A/B baseline for
+``benchmarks/fleet_sweep.py``'s selection-phase breakdown.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -99,135 +109,182 @@ def kmedoids_numpy(D: np.ndarray, k: int, max_sweeps: int = 100
 
 
 # ---------------------------------------------------------------------------
-# JAX on-device solver
+# JAX on-device solver (natively batched; masked lanes)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("k", "max_sweeps"))
-def kmedoids_jax(D: jnp.ndarray, k: int, max_sweeps: int = 50
-                 ) -> KMedoidsResult:
-    """On-device BUILD+SWAP on an unpadded instance — the all-valid special
-    case of ``kmedoids_masked`` (one solver, one copy of the Δ-table math;
-    an all-True mask multiplies every reduction by exactly 1.0, so results
-    are bitwise those of an unmasked implementation)."""
-    return kmedoids_masked(D, jnp.ones((D.shape[0],), bool), k,
-                           max_sweeps=max_sweeps)
+def _take_col(D: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """D (C, M, M), idx (C,) -> (C, M) = D[c, :, idx[c]]."""
+    return jnp.take_along_axis(D, idx[:, None, None], axis=2)[..., 0]
 
 
-@partial(jax.jit, static_argnames=("k", "max_sweeps"))
-def kmedoids_masked(D: jnp.ndarray, valid: jnp.ndarray, k: int,
-                    max_sweeps: int = 50) -> KMedoidsResult:
-    """``kmedoids_jax`` on a *padded* instance.
+@partial(jax.jit, static_argnames=("k", "max_sweeps", "use_kernel",
+                                   "legacy_sweep"))
+def _kmedoids_batched(D: jnp.ndarray, valid: jnp.ndarray, k: int,
+                      max_sweeps: int, use_kernel: bool,
+                      legacy_sweep: bool) -> KMedoidsResult:
+    from repro.kernels.ops import kmedoids_build_cost, kmedoids_delta_sweep
 
-    ``D`` is (M, M) where only the rows/cols with ``valid[i]`` True are real
-    samples; padded entries may hold arbitrary finite values.  Invalid points
-    are never selected as medoids, contribute nothing to any objective or Δ
-    sum, and get assignment −1 / weight 0.  With ``valid`` all-True this is
-    exactly ``kmedoids_jax`` (the unpadded solver) — the fleet engine relies
-    on that equivalence to vmap one solve per client over a cohort stack.
-
-    Callers must guarantee ``k <= valid.sum()`` (not checkable under jit).
-    """
     D = D.astype(jnp.float32)
-    m = D.shape[0]
-    k = min(k, m)
-    vf = valid.astype(jnp.float32)          # (m,) 1.0 on real samples
+    c, m = D.shape[0], D.shape[1]
+    vf = valid.astype(jnp.float32)          # (C, M) 1.0 on real samples
     invalid = ~valid.astype(bool)
+    iota_m = jnp.arange(m, dtype=jnp.int32)
 
     # ---- BUILD (greedy adds; sums masked by vf, invalid candidates BIG) ---
-    cost0 = jnp.sum(D * vf[:, None], axis=0)
-    cost0 = jnp.where(invalid, BIG, cost0)
-    first = jnp.argmin(cost0).astype(jnp.int32)
-    d_near0 = D[:, first]
+    def add_cost(d_near):
+        # Σ_i min(d_near_i, D_ij)·vf_i — the fused one-pass reduction
+        # (d_near = +BIG for the first pick reduces it to the column sum)
+        return kmedoids_build_cost(D, d_near, vf, use_kernel=use_kernel)
+
+    cost0 = jnp.where(invalid, BIG, add_cost(jnp.full((c, m), BIG,
+                                                      jnp.float32)))
+    first = jnp.argmin(cost0, axis=1).astype(jnp.int32)            # (C,)
+    d_near0 = _take_col(D, first)
 
     def build_step(carry, _):
-        d_near, chosen_mask = carry
-        cost = jnp.sum(jnp.minimum(d_near[:, None], D) * vf[:, None], axis=0)
-        cost = jnp.where(chosen_mask | invalid, BIG, cost)
-        nxt = jnp.argmin(cost).astype(jnp.int32)
-        d_near = jnp.minimum(d_near, D[:, nxt])
-        chosen_mask = chosen_mask.at[nxt].set(True)
-        return (d_near, chosen_mask), nxt
+        d_near, chosen = carry
+        cost = jnp.where(chosen | invalid, BIG, add_cost(d_near))
+        nxt = jnp.argmin(cost, axis=1).astype(jnp.int32)
+        d_near = jnp.minimum(d_near, _take_col(D, nxt))
+        chosen = chosen | (iota_m[None] == nxt[:, None])
+        return (d_near, chosen), nxt
 
-    mask0 = jnp.zeros((m,), bool).at[first].set(True)
-    (_, _), rest = jax.lax.scan(build_step, (d_near0, mask0), None,
-                                length=k - 1)
-    medoids0 = jnp.concatenate([first[None], rest]) if k > 1 else first[None]
+    mask0 = iota_m[None] == first[:, None]
+    if k > 1:
+        (_, _), rest = jax.lax.scan(build_step, (d_near0, mask0), None,
+                                    length=k - 1)
+        medoids0 = jnp.concatenate([first[:, None], rest.T], axis=1)
+    else:
+        medoids0 = first[:, None]
 
     # ---- SWAP sweeps (FasterPAM Δ table; all reductions masked by vf) -----
     def sweep(state):
         medoids, _, it = state
-        dm = D[:, medoids]                                        # (m, k)
-        if k > 1:
-            top2_val, top2_idx = jax.lax.top_k(-dm, 2)
-            d1 = -top2_val[:, 0]
-            d2 = -top2_val[:, 1]
-            n_idx = top2_idx[:, 0]
+        dm = jnp.take_along_axis(D, medoids[:, None, :], axis=2)  # (C, M, k)
+        if legacy_sweep:
+            # pre-fusion baseline: top_k stats + 3-pass minimum/one_hot/
+            # einsum chain (kept for the selection-phase A/B benchmark)
+            if k > 1:
+                top2_val, top2_idx = jax.lax.top_k(-dm, 2)
+                d1, d2 = -top2_val[..., 0], -top2_val[..., 1]
+                n_idx = top2_idx[..., 0]
+            else:
+                d1 = dm[..., 0]
+                d2 = jnp.full((c, m), BIG)
+                n_idx = jnp.zeros((c, m), jnp.int32)
+            shift = jnp.minimum(D - d1[..., None], 0.0) * vf[..., None]
+            A = jnp.sum(shift, axis=1)
+            contrib = ((jnp.minimum(D, d2[..., None]) - d1[..., None])
+                       * vf[..., None] - shift)
+            onehot = jax.nn.one_hot(n_idx, k, dtype=contrib.dtype)
+            B = jnp.einsum("cij,cil->cjl", contrib, onehot)
         else:
-            d1 = dm[:, 0]
-            d2 = jnp.full((m,), BIG)
-            n_idx = jnp.zeros((m,), jnp.int32)
-
-        shift = jnp.minimum(D - d1[:, None], 0.0) * vf[:, None]
-        A = jnp.sum(shift, axis=0)                                # (m_j,)
-        contrib = ((jnp.minimum(D, d2[:, None]) - d1[:, None]) * vf[:, None]
-                   - shift)
-        onehot = jax.nn.one_hot(n_idx, k, dtype=contrib.dtype)
-        B = jnp.einsum("ij,il->jl", contrib, onehot)              # (m_j, k)
-        delta = A[:, None] + B
-        is_medoid = jnp.zeros((m,), bool).at[medoids].set(True)
-        delta = jnp.where((is_medoid | invalid)[:, None], BIG, delta)
-        flat = jnp.argmin(delta)
-        j, l = flat // k, flat % k
-        best = delta.reshape(-1)[flat]
-        medoids = jnp.where(best < -1e-6, medoids.at[l].set(j.astype(
-            jnp.int32)), medoids)
+            d1 = jnp.min(dm, axis=-1)
+            n_idx = jnp.argmin(dm, axis=-1).astype(jnp.int32)
+            n_onehot = (jnp.arange(k, dtype=jnp.int32)[None, None]
+                        == n_idx[..., None])
+            # second-nearest = min with the nearest slot masked out
+            # (k = 1 masks everything, giving the conventional d2 = BIG)
+            d2 = jnp.min(jnp.where(n_onehot, BIG, dm), axis=-1)
+            A, B = kmedoids_delta_sweep(D, d1, d2, vf,
+                                        n_onehot.astype(D.dtype),
+                                        use_kernel=use_kernel)
+        delta = A[..., None] + B                                  # (C, M, k)
+        is_medoid = (iota_m[None, :, None] == medoids[:, None, :]).any(-1)
+        delta = jnp.where((is_medoid | invalid)[..., None], BIG, delta)
+        flat = jnp.argmin(delta.reshape(c, m * k), axis=1)
+        best = jnp.take_along_axis(delta.reshape(c, m * k), flat[:, None],
+                                   axis=1)[:, 0]
+        j = (flat // k).astype(jnp.int32)
+        l = (flat % k).astype(jnp.int32)
+        swapped = jnp.where(jnp.arange(k, dtype=jnp.int32)[None]
+                            == l[:, None], j[:, None], medoids)
+        medoids = jnp.where((best < -1e-6)[:, None], swapped, medoids)
         return medoids, best, it + 1
 
     def cond(state):
         _, best, it = state
-        return (best < -1e-6) & (it < max_sweeps)
+        return jnp.any(best < -1e-6) & (it < max_sweeps)
 
-    state = (medoids0, jnp.asarray(-jnp.inf, jnp.float32),
+    state = (medoids0.astype(jnp.int32),
+             jnp.full((c,), -jnp.inf, jnp.float32),
              jnp.asarray(0, jnp.int32))
     medoids, _, _ = jax.lax.while_loop(cond, sweep, state)
 
-    dm = D[:, medoids]
-    assignment = jnp.where(valid, jnp.argmin(dm, axis=1), -1).astype(jnp.int32)
-    weights = jnp.sum(jax.nn.one_hot(assignment, k, dtype=jnp.int32), axis=0)
-    objective = jnp.sum(jnp.min(dm, axis=1) * vf)
+    dm = jnp.take_along_axis(D, medoids[:, None, :], axis=2)
+    assignment = jnp.where(valid, jnp.argmin(dm, axis=-1),
+                           -1).astype(jnp.int32)
+    weights = jnp.sum(jax.nn.one_hot(assignment, k, dtype=jnp.int32), axis=1)
+    objective = jnp.sum(jnp.min(dm, axis=-1) * vf, axis=1)
     return KMedoidsResult(medoids.astype(jnp.int32), assignment, weights,
                           objective)
 
 
-@partial(jax.jit, static_argnames=("k", "max_sweeps"))
 def kmedoids_batched(D: jnp.ndarray, valid: jnp.ndarray, k: int,
-                     max_sweeps: int = 50) -> KMedoidsResult:
+                     max_sweeps: int = 50,
+                     use_kernel: Optional[bool] = None,
+                     legacy_sweep: bool = False) -> KMedoidsResult:
     """One masked k-medoids solve per client over a cohort stack.
 
     D: (C, M, M) distance stack; valid: (C, M) sample masks; static ``k``
     shared across the cohort (the fleet engine groups clients by quantized
-    budget).  Returns a ``KMedoidsResult`` of stacked fields.  The batched
-    ``while_loop`` runs until every client's swap phase converges; frozen
-    lanes keep their converged medoids, so each lane's result equals its
+    budget).  Only rows/cols with ``valid[c, i]`` True are real samples;
+    padded entries may hold arbitrary finite values, are never selected as
+    medoids, contribute nothing to any objective or Δ sum, and get
+    assignment −1 / weight 0.  Callers must guarantee
+    ``k <= valid[c].sum()`` per lane (not checkable under jit).
+
+    Returns a ``KMedoidsResult`` of stacked fields.  The batched
+    ``while_loop`` runs until every lane's swap phase converges; converged
+    lanes are fixed points of the sweep (no Δ < −1e−6 remains, so the
+    masked update is the identity), hence each lane's result equals its
     standalone ``kmedoids_masked`` solve.
+
+    ``use_kernel`` is the tri-state Pallas switch (None = auto: kernels on
+    TPU, jnp elsewhere — see ``repro.kernels.ops.resolve_use_kernel``);
+    ``legacy_sweep`` selects the pre-fusion sweep chain (A/B baseline).
     """
-    return jax.vmap(lambda d, v: kmedoids_masked(d, v, k, max_sweeps))(
-        D, valid)
+    from repro.kernels.ops import resolve_use_kernel
+    return _kmedoids_batched(D, valid, min(int(k), D.shape[-1]),
+                             int(max_sweeps), resolve_use_kernel(use_kernel),
+                             bool(legacy_sweep))
 
 
-def pairwise_sq_dists(x: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
+def kmedoids_masked(D: jnp.ndarray, valid: jnp.ndarray, k: int,
+                    max_sweeps: int = 50,
+                    use_kernel: Optional[bool] = None) -> KMedoidsResult:
+    """Masked solve of a single *padded* instance — the C = 1 view of
+    ``kmedoids_batched`` (one solver, one copy of the Δ-table math)."""
+    res = kmedoids_batched(D[None], valid[None], k, max_sweeps, use_kernel)
+    return KMedoidsResult(res.medoids[0], res.assignment[0], res.weights[0],
+                          res.objective[0])
+
+
+def kmedoids_jax(D: jnp.ndarray, k: int, max_sweeps: int = 50,
+                 use_kernel: Optional[bool] = None) -> KMedoidsResult:
+    """On-device BUILD+SWAP on an unpadded instance — the all-valid special
+    case of ``kmedoids_masked`` (an all-True mask multiplies every
+    reduction by exactly 1.0, so results are bitwise those of an unmasked
+    implementation)."""
+    return kmedoids_masked(D, jnp.ones((D.shape[0],), bool), k,
+                           max_sweeps=max_sweeps, use_kernel=use_kernel)
+
+
+def pairwise_sq_dists(x: jnp.ndarray,
+                      use_kernel: Optional[bool] = None) -> jnp.ndarray:
     """(m, d) -> (m, m) squared Euclidean distances.
 
-    ``use_kernel=True`` routes through the Pallas TPU kernel
-    (``repro.kernels.ops.pairwise_l2``); default is the jnp formulation
-    (identical math, runs on any backend).
+    ``use_kernel`` is the tri-state Pallas switch: True routes through the
+    MXU-tiled kernel (``repro.kernels.ops.pairwise_l2``), False the jnp
+    formulation (identical math, any backend), None auto-selects by
+    backend.  Either way the self-distance diagonal is pinned to exact
+    zeros by the shared ``zero_self_diag`` epilogue the pairwise wrappers
+    own.
     """
-    if use_kernel:
-        from repro.kernels.ops import pairwise_l2
-        d = pairwise_l2(x, squared=True)
-    else:
-        sq = jnp.sum(jnp.square(x), axis=-1)
-        d = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0)
-    # exact zeros on the self-distance diagonal (numerical cancellation)
-    m = d.shape[0]
-    return d * (1.0 - jnp.eye(m, dtype=d.dtype))
+    from repro.kernels.ops import (pairwise_l2, resolve_use_kernel,
+                                   zero_self_diag)
+    if resolve_use_kernel(use_kernel):
+        return pairwise_l2(x, squared=True, zero_diag=True)
+    sq = jnp.sum(jnp.square(x), axis=-1)
+    d = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0)
+    return zero_self_diag(d)

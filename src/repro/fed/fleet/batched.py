@@ -56,7 +56,10 @@ class FleetConfig:
     epochs: int = 2               # E
     batch_size: int = 32          # B
     lr: float = 0.05
-    use_kernel: bool = False      # Pallas pairwise kernel for distance stacks
+    # tri-state Pallas switch for the selection fast path (distance stacks
+    # + fused BUILD/Δ-sweep reductions): None = auto (kernels on supported
+    # backends, jnp fallback otherwise); True/False force on/off
+    use_kernel: Optional[bool] = None
     max_sweeps: int = 25          # k-medoids swap sweeps
     weight_by_samples: bool = True  # aggregate ∝ mⁱ (fleet cohorts are not
     # sampled ∝ mⁱ, so size weighting is the unbiased choice here)
@@ -178,18 +181,28 @@ def make_cohort_groups(clients_data: Sequence[Dict[str, np.ndarray]],
 class FleetEngine:
     """Holds the jitted cohort programs (compiled once per group shape).
 
-    ``run_group(..., batched=True)`` executes all C clients of a group in
-    one vmapped program stack.  ``batched=False`` is the status-quo
-    per-client Python loop: the same mini-batch steps, feature pass, and
-    masked k-medoids solve, but dispatched one client at a time with one
-    jitted call per training step — the ``LocalTrainer.run_epochs``
-    execution model.  Identical arithmetic, so results match; only the
-    dispatch structure differs.
+    ``run_group(..., batched=True)`` executes all C clients of a group as
+    **one jitted per-group round program**: the straggler path
+    (grad features → distance stack → fused-Δ-sweep k-medoids → epoch-0
+    SGD → coreset gather → E−1 coreset epochs) compiles into a single
+    XLA dispatch with ``donate_argnums`` on the broadcast parameter stack
+    and the group data (the pre-fusion engine issued six dispatches per
+    group with host round-trips between them).  ``batched=False`` is the
+    status-quo per-client Python loop: the same mini-batch steps, feature
+    pass, and masked k-medoids solve, but dispatched one client at a time
+    with one jitted call per training step — the
+    ``LocalTrainer.run_epochs`` execution model.  Identical arithmetic,
+    so results match; only the dispatch structure differs.
+
+    ``dispatch_count`` counts top-level jitted program invocations (one
+    per group on the fused path) — the benchmark's dispatches-per-group
+    breakdown and the single-dispatch regression test read it.
     """
 
     def __init__(self, model, cfg: FleetConfig):
         self.model = model
         self.cfg = cfg
+        self.dispatch_count = 0
 
         def sgd_step(p, data, w, ix):
             """One mini-batch SGD step for one client."""
@@ -222,22 +235,142 @@ class FleetEngine:
             params, losses = jax.lax.scan(step, params, n_steps_arr)
             return params, losses[-1]
 
-        # raw per-client programs — the sharded engine re-vmaps these
-        # inside its shard_map bodies so all three execution modes share
-        # one copy of the arithmetic
+        # raw per-client programs — the fused group bodies re-vmap these
+        # (and the sharded engine wraps the same bodies in shard_map) so
+        # all three execution modes share one copy of the arithmetic
         self._sgd_scan = sgd_scan
         self._core_scan = core_scan
-        # batched cohort programs
-        self._sgd = jax.jit(jax.vmap(sgd_scan))
-        self._core = jax.jit(jax.vmap(core_scan))
+        # fused per-group round programs, compiled per (k, data keys)
+        self._group_programs: Dict[Tuple[int, Tuple[str, ...]], Any] = {}
+        # fused selection-only programs (benchmark A/B + dispatch tests)
+        self._select_programs: Dict[Tuple[int, Tuple[str, ...]], Any] = {}
+        # standalone batched feature pass: first stage of the pre-fusion
+        # dispatch chain, kept as the selection benchmark's baseline
         self._feats = jax.jit(jax.vmap(
             lambda p, d: model.grad_features(p, d), in_axes=(None, 0)))
-        self._gather = jax.jit(
-            jax.vmap(lambda v, idx: v[idx]))
         # per-client loop reference programs (one dispatch per step)
         self._sgd_step1 = jax.jit(sgd_step)
         self._core_step1 = jax.jit(core_step)
         self._feats1 = jax.jit(model.grad_features)
+
+    # -- fused group programs ---------------------------------------------
+
+    def _make_group_body(self, k: int):
+        """One cohort group's full round as a single traced body.
+
+        ``k == 0``: E epochs of mini-batch SGD.  ``k > 0``: the Alg. 1
+        straggler path — features at round-start params, fused coreset
+        selection, one full-set epoch, E−1 weighted coreset epochs.
+        Signature (k == 0): ``body(params, p0, data, w, idx)``;
+        (k > 0): ``body(params, p0, data, w, valid, idx1, steps)``; both
+        return ``(params (C, ...), losses (C,), medoid indices or
+        None)``.  ``p0`` is the pre-broadcast (C, ...) parameter stack —
+        passed in (rather than built inside) so the jitted wrapper can
+        donate its buffers to the same-shaped output stack.  The sharded
+        engine wraps this exact body in ``shard_map`` (per-device client
+        lanes + psum aggregation), which is what keeps the loop / batched
+        / sharded parity contract a single copy of the arithmetic.
+        """
+        cfg = self.cfg
+        model = self.model
+        vm_sgd = jax.vmap(self._sgd_scan)
+        vm_core = jax.vmap(self._core_scan)
+        vm_feats = jax.vmap(lambda p, d: model.grad_features(p, d),
+                            in_axes=(None, 0))
+        vm_gather = jax.vmap(lambda v, ix: v[ix])
+
+        if k == 0:
+            def body(params, p0, data, w, idx):
+                p, losses = vm_sgd(p0, data, w, idx)
+                return p, losses, None
+            return body
+
+        def body(params, p0, data, w, valid, idx1, steps):
+            feats = vm_feats(params, data)                 # (C, M, F)
+            coreset = build_coreset_batched(
+                feats, valid, k, use_kernel=cfg.use_kernel,
+                max_sweeps=cfg.max_sweeps)
+            p, _ = vm_sgd(p0, data, w, idx1)
+            cdata = {kk: vm_gather(v, coreset.indices)
+                     for kk, v in data.items()}            # (C, k, ...)
+            p, losses = vm_core(p, cdata, coreset.weights, steps)
+            return p, losses, coreset.indices
+        return body
+
+    @staticmethod
+    def _donate_argnums() -> Tuple[int, ...]:
+        """Donate (p0, data): the broadcast parameter stack is reused for
+        the same-shaped output stack and the group data dies with the
+        program.  CPU has no donation support (it would only warn), so
+        only accelerators opt in."""
+        return (1, 2) if jax.default_backend() != "cpu" else ()
+
+    def _group_program(self, k: int, data_keys: Tuple[str, ...]):
+        key = (k, data_keys)
+        fn = self._group_programs.get(key)
+        if fn is None:
+            fn = jax.jit(self._make_group_body(k),
+                         donate_argnums=self._donate_argnums())
+            self._group_programs[key] = fn
+        return fn
+
+    def _selection_program(self, k: int, data_keys: Tuple[str, ...]):
+        """Selection phase only (features → distances → k-medoids) as one
+        jitted dispatch — the benchmark's fused measurement unit."""
+        key = (k, data_keys)
+        fn = self._select_programs.get(key)
+        if fn is None:
+            cfg = self.cfg
+            vm_feats = jax.vmap(
+                lambda p, d: self.model.grad_features(p, d),
+                in_axes=(None, 0))
+
+            def select(params, data, valid):
+                feats = vm_feats(params, data)
+                return build_coreset_batched(
+                    feats, valid, k, use_kernel=cfg.use_kernel,
+                    max_sweeps=cfg.max_sweeps)
+            fn = jax.jit(select)
+            self._select_programs[key] = fn
+        return fn
+
+    def select_group_coresets(self, params: Pytree, group: CohortGroup,
+                              fused: bool = True):
+        """Run one straggler group's selection phase; returns
+        (``Coreset`` of stacked fields, dispatches issued).
+
+        ``fused=True`` is the fast path: one jitted program.
+        ``fused=False`` replays the pre-fusion dispatch chain this PR
+        replaced — a jitted feature pass, a jitted pairwise program, an
+        eager diagonal fix-up, and a jitted legacy-sweep k-medoids solve,
+        with the host walking results between them — as the selection
+        benchmark's A/B baseline.
+        """
+        if group.k == 0:
+            raise ValueError("group has no selection phase (k == 0)")
+        cfg = self.cfg
+        data = {kk: jnp.asarray(v) for kk, v in group.data.items()}
+        valid = jnp.asarray(group.valid)
+        if fused:
+            program = self._selection_program(group.k, tuple(sorted(data)))
+            self.dispatch_count += 1
+            return program(params, data, valid), 1
+        from repro.core.coreset import Coreset
+        from repro.core.kmedoids import kmedoids_batched
+        from repro.kernels.ops import pairwise_l2_batched
+        feats = self._feats(params, data)                  # dispatch 1
+        D = pairwise_l2_batched(feats, squared=False,      # dispatch 2
+                                use_kernel=False)
+        m = D.shape[-1]
+        D = D * (1.0 - jnp.eye(m, dtype=D.dtype))[None]    # eager epilogue
+        res = kmedoids_batched(D, valid, group.k,          # dispatch 3
+                               max_sweeps=cfg.max_sweeps,
+                               use_kernel=False, legacy_sweep=True)
+        self.dispatch_count += 3
+        return Coreset(indices=res.medoids,
+                       weights=res.weights.astype(jnp.float32),
+                       objective=res.objective,
+                       assignment=res.assignment), 3
 
     # -- helpers ----------------------------------------------------------
 
@@ -260,8 +393,8 @@ class FleetEngine:
     def _run_group_stacked(self, params: Pytree, group: CohortGroup,
                            sl: slice) -> Tuple[Pytree, jnp.ndarray,
                                                Optional[jnp.ndarray]]:
-        """Run clients ``sl`` of a group; returns (params (C,...), losses,
-        medoid indices or None)."""
+        """Run clients ``sl`` of a group as ONE jitted dispatch; returns
+        (params (C,...), losses, medoid indices or None)."""
         cfg = self.cfg
         # host-side slice, then one device transfer per call: the batched
         # path ships the whole group at once, the loop path one client at
@@ -270,25 +403,22 @@ class FleetEngine:
         c = len(next(iter(data.values())))
         w = jnp.asarray(group.valid[sl].astype(np.float32))  # (C, M)
         p0 = self._broadcast_params(params, c)
+        program = self._group_program(group.k, tuple(sorted(data)))
+        self.dispatch_count += 1
 
         if group.k == 0:    # full-set: E epochs of minibatch SGD
             idx = self._batch_indices(group, slice(None), sl)
-            p, losses = self._sgd(p0, data, w, idx)
+            p, losses, _ = program(params, p0, data, w, idx)
             return p, losses, None
 
-        # Alg. 1 straggler path: features at round-start params, coreset
-        # selection, one full-set epoch, E−1 coreset epochs.
-        feats = self._feats(params, data)                  # (C, M, F)
-        coreset = build_coreset_batched(
-            feats, jnp.asarray(group.valid[sl]), group.k,
-            use_kernel=cfg.use_kernel, max_sweeps=cfg.max_sweeps)
+        # Alg. 1 straggler path: features at round-start params, fused
+        # coreset selection, one full-set epoch, E−1 coreset epochs —
+        # all inside the one program.
         idx1 = self._batch_indices(group, slice(0, 1), sl)
-        p, _ = self._sgd(p0, data, w, idx1)
-        cdata = {kk: self._gather(v, coreset.indices)
-                 for kk, v in data.items()}                # (C, k, ...)
+        valid = jnp.asarray(group.valid[sl])
         steps = jnp.zeros((c, max(cfg.epochs - 1, 1)))
-        p, losses = self._core(p, cdata, coreset.weights, steps)
-        return p, losses, coreset.indices
+        p, losses, meds = program(params, p0, data, w, valid, idx1, steps)
+        return p, losses, meds
 
     def _run_client_loop(self, params: Pytree, group: CohortGroup, c: int
                          ) -> Tuple[Pytree, float, Optional[np.ndarray]]:

@@ -121,6 +121,7 @@ def run_scenario(name: str, runtime: str, model, clients_data,
                  max_updates: Optional[int] = None, concurrency: int = 8,
                  scheduler=None, aggregator=None,
                  fleet_engine: str = "batched",
+                 use_kernel: Optional[bool] = None,
                  verbose: bool = False) -> Dict[str, Any]:
     """Drive one named scenario through one runtime.
 
@@ -130,11 +131,15 @@ def run_scenario(name: str, runtime: str, model, clients_data,
     All three consume the same specs + capability trace from the registry,
     so a scenario means the same fleet everywhere.  ``fleet_engine``
     selects the fleet execution model ("batched" | "loop" | "sharded" —
-    the mesh-sharded engine, falling back to batched on one device).  The
-    result dict gains ``scenario`` and ``runtime`` keys.
+    the mesh-sharded engine, falling back to batched on one device).
+    ``use_kernel`` is the tri-state Pallas switch for the coreset
+    selection fast path (None = auto by backend), threaded into whichever
+    runtime's config does the selecting.  The result dict gains
+    ``scenario`` and ``runtime`` keys.
     """
     # late imports: repro.fed.{server,events,strategies} import nothing from
     # fleet, keeping this the only direction of coupling
+    from repro.core.coreset import FedCoreConfig
     from repro.fed.events import AsyncFLConfig, run_federated_async
     from repro.fed.fleet.batched import FleetConfig, run_fleet
     from repro.fed.server import FLConfig, run_federated
@@ -142,12 +147,13 @@ def run_scenario(name: str, runtime: str, model, clients_data,
 
     sizes = [len(next(iter(d.values()))) for d in clients_data]
     specs, trace = build_scenario(name, sizes, seed)
+    core_cfg = FedCoreConfig(use_kernel=use_kernel)
 
     if runtime == "sync":
         cfg = FLConfig(rounds=rounds, clients_per_round=clients_per_round,
                        epochs=epochs, batch_size=batch_size, lr=lr,
                        straggler_pct=straggler_pct, seed=seed, trace=trace)
-        strat = FedCore(LocalTrainer(model, lr, batch_size))
+        strat = FedCore(LocalTrainer(model, lr, batch_size), core_cfg)
         out = run_federated(model, clients_data, specs, strat, cfg,
                             test_data=test_data, scheduler=scheduler,
                             verbose=verbose)
@@ -157,14 +163,14 @@ def run_scenario(name: str, runtime: str, model, clients_data,
             concurrency=concurrency, epochs=epochs, batch_size=batch_size,
             lr=lr, straggler_pct=straggler_pct,
             record_every=clients_per_round, seed=seed, trace=trace)
-        strat = FedCore(LocalTrainer(model, lr, batch_size))
+        strat = FedCore(LocalTrainer(model, lr, batch_size), core_cfg)
         out = run_federated_async(model, clients_data, specs, strat, cfg,
                                   aggregator=aggregator,
                                   test_data=test_data, scheduler=scheduler,
                                   verbose=verbose)
     elif runtime == "fleet":
         cfg = FleetConfig(epochs=epochs, batch_size=batch_size, lr=lr,
-                          seed=seed)
+                          seed=seed, use_kernel=use_kernel)
         out = run_fleet(model, clients_data, specs, cfg, rounds=rounds,
                         scheduler=scheduler, trace=trace,
                         straggler_pct=straggler_pct, test_data=test_data,

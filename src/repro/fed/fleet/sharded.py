@@ -46,7 +46,6 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.coreset import build_coreset_batched
 from repro.distributed.fedavg_mesh import weighted_psum_sum
 from repro.fed.fleet.batched import CohortGroup, FleetConfig, FleetEngine
 
@@ -105,22 +104,20 @@ class ShardedFleetEngine(FleetEngine):
         """Build the shard_mapped program for groups with budget ``k``.
 
         The body sees the per-device view (C_local client lanes) and is
-        the batched engine's math re-vmapped, ending in the cross-device
-        weighted psum."""
-        cfg = self.cfg
+        the batched engine's fused group body
+        (``FleetEngine._make_group_body`` — one copy of the arithmetic
+        across loop/batched/sharded), ending in the cross-device weighted
+        psum."""
         mesh = self.mesh
         axes = (CLIENT_AXIS,)
-        vm_sgd = jax.vmap(self._sgd_scan)
-        vm_core = jax.vmap(self._core_scan)
-        vm_feats = jax.vmap(lambda p, d: self.model.grad_features(p, d),
-                            in_axes=(None, 0))
-        vm_gather = jax.vmap(lambda v, ix: v[ix])
+        group_body = self._make_group_body(k)
         broadcast = self._broadcast_params
 
         if k == 0:
             def body(params, data, w, lane_w, idx):
                 c = w.shape[0]
-                p, losses = vm_sgd(broadcast(params, c), data, w, idx)
+                p, losses, _ = group_body(params, broadcast(params, c),
+                                          data, w, idx)
                 part, wsum = weighted_psum_sum(lane_w, p, axes)
                 return part, wsum, losses
 
@@ -133,16 +130,10 @@ class ShardedFleetEngine(FleetEngine):
         else:
             def body(params, data, w, lane_w, idx1, valid, steps):
                 c = w.shape[0]
-                feats = vm_feats(params, data)
-                coreset = build_coreset_batched(
-                    feats, valid, k, use_kernel=cfg.use_kernel,
-                    max_sweeps=cfg.max_sweeps)
-                p, _ = vm_sgd(broadcast(params, c), data, w, idx1)
-                cdata = {kk: vm_gather(v, coreset.indices)
-                         for kk, v in data.items()}
-                p, losses = vm_core(p, cdata, coreset.weights, steps)
+                p, losses, meds = group_body(params, broadcast(params, c),
+                                             data, w, valid, idx1, steps)
                 part, wsum = weighted_psum_sum(lane_w, p, axes)
-                return part, wsum, losses, coreset.indices
+                return part, wsum, losses, meds
 
             def specs(params):
                 shard = P(CLIENT_AXIS)
@@ -188,6 +179,7 @@ class ShardedFleetEngine(FleetEngine):
         t_full = cfg.epochs * (m_pad // cfg.batch_size)
         idx_all = group.perms.reshape(c, t_full, cfg.batch_size)
         program = self._program(group.k, tuple(sorted(group.data)))
+        self.dispatch_count += 1
 
         # outputs stay device-resident (lazy): materializing here would
         # block each group's program before the next one is dispatched,

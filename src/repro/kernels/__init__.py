@@ -1,11 +1,30 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-* ``pairwise_l2``      — the FedCore coreset distance matrix (MXU-tiled)
-* ``flash_attention``  — GQA causal/windowed flash attention
-* ``rmsnorm``          — fused RMSNorm
+Map of which op each kernel fuses (module → ``ops`` wrapper → what the
+single launch replaces):
 
-``ops`` holds the jit'd public wrappers (padding, backend selection,
-interpret-mode on CPU); ``ref`` the pure-jnp oracles the tests assert
-against.
+* ``pairwise_l2`` → ``ops.pairwise_l2`` / ``ops.pairwise_l2_batched`` —
+  the FedCore coreset distance matrix/stack: MXU-tiled ‖a‖²+‖b‖²−2ab
+  with the norm epilogue, clamp, sqrt, and (``zero_diag``) diagonal
+  fix-up fused into the cross-term accumulation; the batched variant
+  carries a leading client grid dim (one cohort group = one launch).
+* ``kmedoids_pallas.build_cost_pallas`` → ``ops.kmedoids_build_cost`` —
+  the k-medoids BUILD greedy add-cost Σᵢ min(d_near, D[i, j])·vfᵢ,
+  streamed tile-by-tile instead of materializing the (C, M, M)
+  ``minimum`` tensor each greedy step.
+* ``kmedoids_pallas.delta_sweep_pallas`` → ``ops.kmedoids_delta_sweep``
+  — one FasterPAM swap sweep's A_j and B_{j,l} reductions in a single
+  pass over D (replacing the 3+-pass ``minimum``/``one_hot``/``einsum``
+  chain), with the per-tile one-hot segment matmul on the MXU.
+* ``flash_attention`` → ``ops.flash_attention`` — GQA causal/windowed
+  flash attention (softmax streamed, scores never materialized).
+* ``rmsnorm`` → ``ops.rmsnorm`` — fused RMSNorm over the last axis.
+
+``ops`` holds the jit'd public wrappers (padding, backend selection via
+the tri-state ``resolve_use_kernel``, interpret-mode on CPU so CI covers
+every kernel); ``ref`` the pure-jnp oracles the tests assert against —
+and the identical-math fallbacks the wrappers run where the kernels
+don't pay (the fused selection path calls the same functions either
+way).
 """
 from repro.kernels import ops, ref  # noqa: F401

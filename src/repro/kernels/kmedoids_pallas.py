@@ -1,0 +1,161 @@
+"""Pallas TPU kernels for the fused k-medoids selection fast path.
+
+The FedCore selection phase (Eq. 5) spends its time in two dense
+reductions over the per-client distance stack D (C, M, M):
+
+* **BUILD** — each greedy add evaluates every candidate j's add-cost
+      cost[c, j] = Σ_i min(d_near[c, i], D[c, i, j]) · vf[c, i]
+  The jnp formulation materializes the (C, M, M) ``minimum`` tensor per
+  step; ``build_cost_pallas`` streams D tile-by-tile and keeps only a
+  (1, bm) accumulator in VMEM.
+
+* **Δ-sweep** — one FasterPAM swap sweep needs (Schubert & Rousseeuw
+  2021, see ``repro.core.kmedoids``):
+      A[c, j]    = Σ_i (min(D_ij, d1_i) − d1_i) · vf_i
+      B[c, j, l] = Σ_{i: n(i)=l} (clip(D_ij, d1_i, d2_i) − d1_i) · vf_i
+  The jnp chain makes 3+ full O(M²) HBM passes per sweep (shift tensor,
+  contrib tensor, one-hot einsum).  ``delta_sweep_pallas`` computes both
+  reductions in a **single tiled pass** over D: each (c, j, i) tile
+  builds shift/contrib in registers, folds shift into a row-sum
+  accumulator and contrib into a (bm, K) MXU matmul against the
+  nearest-medoid one-hot — the memory traffic finally matches the math.
+
+Both kernels carry a leading client-batch grid dimension (one cohort
+group = one launch), accept masked lanes via ``vf`` (invalid rows
+contribute exactly 0), and run under ``interpret=True`` on CPU so the
+whole fast path is exercised in CI.  Shapes must already be padded to
+block multiples — ``repro.kernels.ops`` owns the padding and the jnp
+fallback dispatch; ``repro.kernels.ref`` holds the mathematical oracles
+the kernels are tested against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _build_cost_kernel(d_ref, dn_ref, vf_ref, out_ref, acc_ref, *, n_i: int):
+    i_step = pl.program_id(2)
+
+    @pl.when(i_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    d = d_ref[0].astype(jnp.float32)             # (bi, bj) distance tile
+    dn = dn_ref[0].astype(jnp.float32)           # (bi,) current d_near
+    vf = vf_ref[0].astype(jnp.float32)           # (bi,) valid mask
+    add = jnp.minimum(dn[:, None], d) * vf[:, None]
+    acc_ref[...] += jnp.sum(add, axis=0, keepdims=True)   # (1, bj)
+
+    @pl.when(i_step == n_i - 1)
+    def _epilogue():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def build_cost_pallas(D: jnp.ndarray, d_near: jnp.ndarray, vf: jnp.ndarray,
+                      *, block_m: int = 128,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Fused BUILD add-cost: D (C, M, M), d_near/vf (C, M) -> (C, M).
+
+    cost[c, j] = Σ_i min(d_near[c, i], D[c, i, j]) · vf[c, i], computed
+    tile-by-tile without materializing the (C, M, M) minimum tensor.  M
+    must be a multiple of ``block_m`` (ops.py pads; padded rows must
+    carry vf = 0, padded cost columns are sliced off by the wrapper).
+    """
+    c, m, _ = D.shape
+    block_m = min(block_m, m)
+    assert m % block_m == 0
+    n_i = m // block_m
+
+    grid = (c, n_i, n_i)                          # (client, j-tile, i-step)
+    kernel = functools.partial(_build_cost_kernel, n_i=n_i)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_m), lambda b, j, i: (b, i, j)),
+            pl.BlockSpec((1, block_m), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, block_m), lambda b, j, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m), lambda b, j, i: (b, j)),
+        out_shape=jax.ShapeDtypeStruct((c, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, block_m), jnp.float32)],
+        interpret=interpret,
+    )(D, d_near, vf)
+
+
+def _delta_sweep_kernel(d_ref, d1_ref, d2_ref, vf_ref, oh_ref, a_ref, b_ref,
+                        acc_a_ref, acc_b_ref, *, n_i: int):
+    i_step = pl.program_id(2)
+
+    @pl.when(i_step == 0)
+    def _init():
+        acc_a_ref[...] = jnp.zeros_like(acc_a_ref)
+        acc_b_ref[...] = jnp.zeros_like(acc_b_ref)
+
+    d = d_ref[0].astype(jnp.float32)             # (bi, bj)
+    d1 = d1_ref[0].astype(jnp.float32)[:, None]  # (bi, 1) nearest-medoid dist
+    d2 = d2_ref[0].astype(jnp.float32)[:, None]  # (bi, 1) second-nearest
+    vf = vf_ref[0].astype(jnp.float32)[:, None]  # (bi, 1) valid mask
+    oh = oh_ref[0].astype(jnp.float32)           # (bi, K) one_hot(n_idx)
+
+    # one read of the tile feeds both reductions
+    shift = (jnp.minimum(d, d1) - d1) * vf                 # ≤ 0 removal gain
+    contrib = (jnp.clip(d, d1, d2) - d1) * vf              # per-cluster term
+    acc_a_ref[...] += jnp.sum(shift, axis=0, keepdims=True)        # (1, bj)
+    acc_b_ref[...] += jax.lax.dot_general(                 # contribᵀ @ onehot
+        contrib, oh, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (bj, K)
+
+    @pl.when(i_step == n_i - 1)
+    def _epilogue():
+        a_ref[...] = acc_a_ref[...].astype(a_ref.dtype)
+        b_ref[0] = acc_b_ref[...].astype(b_ref.dtype)
+
+
+def delta_sweep_pallas(D: jnp.ndarray, d1: jnp.ndarray, d2: jnp.ndarray,
+                       vf: jnp.ndarray, n_onehot: jnp.ndarray, *,
+                       block_m: int = 128, interpret: bool = False):
+    """Fused FasterPAM Δ-sweep reductions in one pass over D.
+
+    D (C, M, M); d1/d2/vf (C, M); n_onehot (C, M, K) = one_hot of each
+    point's nearest-medoid slot.  Returns (A (C, M), B (C, M, K)) such
+    that Δ(j, l) = A[:, j] + B[:, j, l].  M must be a multiple of
+    ``block_m`` and K a lane-aligned pad of the true k (ops.py owns the
+    padding; padded rows carry vf = 0, padded K columns have zero
+    one-hot mass so the extra B columns are exactly 0).
+    """
+    c, m, _ = D.shape
+    kp = n_onehot.shape[-1]
+    block_m = min(block_m, m)
+    assert m % block_m == 0
+    n_i = m // block_m
+
+    grid = (c, n_i, n_i)                          # (client, j-tile, i-step)
+    kernel = functools.partial(_delta_sweep_kernel, n_i=n_i)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_m), lambda b, j, i: (b, i, j)),
+            pl.BlockSpec((1, block_m), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, block_m), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, block_m), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, block_m, kp), lambda b, j, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_m), lambda b, j, i: (b, j)),
+            pl.BlockSpec((1, block_m, kp), lambda b, j, i: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, m), jnp.float32),
+            jax.ShapeDtypeStruct((c, m, kp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_m), jnp.float32),
+                        pltpu.VMEM((block_m, kp), jnp.float32)],
+        interpret=interpret,
+    )(D, d1, d2, vf, n_onehot)

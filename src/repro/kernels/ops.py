@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.kmedoids_pallas import build_cost_pallas, delta_sweep_pallas
 from repro.kernels.pairwise_l2 import (pairwise_l2_batched_pallas,
                                        pairwise_l2_pallas)
 from repro.kernels.rmsnorm import rmsnorm_pallas
@@ -22,6 +23,33 @@ from repro.kernels.rmsnorm import rmsnorm_pallas
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_use_kernel(use_kernel: Optional[bool]) -> bool:
+    """Resolve the tri-state kernel switch used across the selection path.
+
+    ``True``/``False`` force the Pallas kernels on/off; ``None`` (auto)
+    enables them on backends where they compile natively (TPU) and falls
+    back to the identical-math jnp formulations elsewhere — interpret
+    mode keeps CI coverage, but on CPU the fused jnp path is the fast
+    one.  Resolve *before* any jit boundary so auto and its resolved
+    value share one compilation cache entry.
+    """
+    return _on_tpu() if use_kernel is None else bool(use_kernel)
+
+
+def zero_self_diag(d: jnp.ndarray) -> jnp.ndarray:
+    """Exact zeros on the self-distance diagonal of (..., M, M) stacks.
+
+    ``‖a‖² + ‖b‖² − 2ab`` cancels imperfectly in float32, leaving tiny
+    nonzeros (or NaN-adjacent negatives pre-clamp) on the diagonal; every
+    self-distance consumer (k-medoids BUILD/SWAP) needs literal zeros.
+    This helper is the single owner of that fix-up — the pairwise
+    wrappers apply it under ``zero_diag=True`` rather than each caller
+    re-deriving it.
+    """
+    m = d.shape[-1]
+    return d * (1.0 - jnp.eye(m, dtype=d.dtype))
 
 
 def _pad_to(x, axis: int, multiple: int):
@@ -48,15 +76,17 @@ def _pow2_block(n: int, cap: int, shrink: bool, floor: int = 8) -> int:
     return max(floor, min(cap, p))
 
 
-@functools.partial(jax.jit, static_argnames=("squared", "block_m", "block_n",
+@functools.partial(jax.jit, static_argnames=("squared", "zero_diag",
+                                             "block_m", "block_n",
                                              "block_k", "interpret"))
-def pairwise_l2(x, y=None, *, squared: bool = False, block_m: int = 128,
-                block_n: int = 128, block_k: int = 512,
+def pairwise_l2(x, y=None, *, squared: bool = False, zero_diag: bool = False,
+                block_m: int = 128, block_n: int = 128, block_k: int = 512,
                 interpret: Optional[bool] = None):
     """Pairwise Euclidean distances via the MXU-tiled kernel.
 
     Zero-row padding is exact for the cross term; padded rows/cols are
-    sliced off before returning.
+    sliced off before returning.  ``zero_diag`` (self-mode only) pins the
+    self-distance diagonal to exact zeros for k-medoids consumers.
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     self_mode = y is None
@@ -74,14 +104,16 @@ def pairwise_l2(x, y=None, *, squared: bool = False, block_m: int = 128,
                              else yp, squared=squared, block_m=block_m,
                              block_n=block_n, block_k=bk,
                              interpret=interpret)
-    return out[:m, :n]
+    out = out[:m, :n]
+    return zero_self_diag(out) if zero_diag and self_mode else out
 
 
 @functools.partial(jax.jit, static_argnames=("squared", "use_kernel",
-                                             "block_m", "block_k",
-                                             "interpret"))
+                                             "zero_diag", "block_m",
+                                             "block_k", "interpret"))
 def pairwise_l2_batched(x, *, squared: bool = False, use_kernel: bool = True,
-                        block_m: int = 128, block_k: int = 512,
+                        zero_diag: bool = False, block_m: int = 128,
+                        block_k: int = 512,
                         interpret: Optional[bool] = None):
     """Per-client self-distance stacks: x (C, M, D) -> (C, M, M).
 
@@ -90,11 +122,14 @@ def pairwise_l2_batched(x, *, squared: bool = False, use_kernel: bool = True,
     rows/cols are sliced off before returning) and dispatches to the
     batched Pallas kernel; ``use_kernel=False`` is the identical-math jnp
     einsum formulation for backends/shapes the kernel doesn't cover.
+    ``zero_diag`` pins each client's self-distance diagonal to exact
+    zeros (the k-medoids contract).
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     if not use_kernel:
-        return jax.vmap(lambda xi: ref.pairwise_l2_ref(xi, squared=squared)
-                        )(x)
+        out = jax.vmap(lambda xi: ref.pairwise_l2_ref(xi, squared=squared)
+                       )(x)
+        return zero_self_diag(out) if zero_diag else out
     block_m = _pow2_block(x.shape[1], block_m, shrink=interpret)
     xp, m = _pad_to(x, 1, block_m)
     xp, _ = _pad_to(xp, 2, 128)
@@ -103,7 +138,8 @@ def pairwise_l2_batched(x, *, squared: bool = False, use_kernel: bool = True,
         bk //= 2
     out = pairwise_l2_batched_pallas(xp, squared=squared, block_m=block_m,
                                      block_k=bk, interpret=interpret)
-    return out[:, :m, :m]
+    out = out[:, :m, :m]
+    return zero_self_diag(out) if zero_diag else out
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
@@ -125,6 +161,66 @@ def flash_attention(q, k, v, *, causal: bool = True,
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   scale=scale, block_q=bq, block_k=bk,
                                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "block_m",
+                                             "interpret"))
+def kmedoids_build_cost(D, d_near, vf, *, use_kernel: bool = True,
+                        block_m: int = 128,
+                        interpret: Optional[bool] = None):
+    """Fused BUILD add-cost: D (C, M, M), d_near/vf (C, M) -> (C, M).
+
+    One tiled pass over the distance stack per greedy add instead of a
+    materialized (C, M, M) ``minimum`` tensor.  ``use_kernel=False`` is
+    the identical-math jnp formulation (``ref.kmedoids_build_cost_ref``).
+    Padded rows/cols (to the block multiple) carry vf = 0 so they add
+    exactly nothing; padded cost columns are sliced off.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    if not use_kernel:
+        return ref.kmedoids_build_cost_ref(D, d_near, vf)
+    m = D.shape[1]
+    block_m = _pow2_block(m, block_m, shrink=interpret)
+    Dp, _ = _pad_to(D, 1, block_m)
+    Dp, _ = _pad_to(Dp, 2, block_m)
+    dnp, _ = _pad_to(d_near, 1, block_m)
+    vfp, _ = _pad_to(vf, 1, block_m)
+    out = build_cost_pallas(Dp, dnp, vfp, block_m=block_m,
+                            interpret=interpret)
+    return out[:, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "block_m",
+                                             "interpret"))
+def kmedoids_delta_sweep(D, d1, d2, vf, n_onehot, *, use_kernel: bool = True,
+                         block_m: int = 128,
+                         interpret: Optional[bool] = None):
+    """Fused FasterPAM Δ-sweep reductions: one pass over D per sweep.
+
+    D (C, M, M); d1/d2/vf (C, M); n_onehot (C, M, k).  Returns
+    (A (C, M), B (C, M, k)) with Δ(j, l) = A[:, j] + B[:, j, l] — see
+    ``ref.kmedoids_delta_sweep_ref`` for the math, which is also the
+    ``use_kernel=False`` fallback.  M pads to the block multiple
+    (vf = 0 rows contribute nothing), k pads to a lane-aligned width
+    with zero one-hot mass (extra B columns are exactly 0, sliced off).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    if not use_kernel:
+        return ref.kmedoids_delta_sweep_ref(D, d1, d2, vf, n_onehot)
+    m, k = D.shape[1], n_onehot.shape[-1]
+    block_m = _pow2_block(m, block_m, shrink=interpret)
+    k_pad = _pow2_block(k, 128, shrink=True) if interpret else -(-k // 128
+                                                                 ) * 128
+    Dp, _ = _pad_to(D, 1, block_m)
+    Dp, _ = _pad_to(Dp, 2, block_m)
+    d1p, _ = _pad_to(d1, 1, block_m)
+    d2p, _ = _pad_to(d2, 1, block_m)
+    vfp, _ = _pad_to(vf, 1, block_m)
+    ohp, _ = _pad_to(n_onehot, 1, block_m)
+    ohp, _ = _pad_to(ohp, 2, k_pad)
+    A, B = delta_sweep_pallas(Dp, d1p, d2p, vfp, ohp, block_m=block_m,
+                              interpret=interpret)
+    return A[:, :m], B[:, :m, :k]
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_m", "interpret"))

@@ -52,3 +52,40 @@ def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray,
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def kmedoids_build_cost_ref(D: jnp.ndarray, d_near: jnp.ndarray,
+                            vf: jnp.ndarray) -> jnp.ndarray:
+    """Greedy BUILD add-cost over a masked distance stack.
+
+    D (..., M, M); d_near/vf (..., M).  Returns
+    cost[..., j] = Σ_i min(d_near_i, D_ij)·vf_i — the cost of the point
+    set after adding candidate j to the current medoids (``d_near`` is
+    each point's distance to its nearest already-chosen medoid; pass
+    +BIG for the first pick so cost reduces to the plain column sum).
+    """
+    add = jnp.minimum(d_near[..., None], D) * vf[..., None]
+    return jnp.sum(add, axis=-2)
+
+
+def kmedoids_delta_sweep_ref(D: jnp.ndarray, d1: jnp.ndarray,
+                             d2: jnp.ndarray, vf: jnp.ndarray,
+                             n_onehot: jnp.ndarray):
+    """FasterPAM swap-sweep reductions (the Δ(j, l) = A_j + B_{j,l} split).
+
+    D (..., M, M); d1/d2/vf (..., M); n_onehot (..., M, K) one-hot of each
+    point's nearest-medoid slot.  Returns (A (..., M), B (..., M, K)):
+
+        A[j]    = Σ_i (min(D_ij, d1_i) − d1_i) · vf_i
+        B[j, l] = Σ_{i: n(i)=l} (clip(D_ij, d1_i, d2_i) − d1_i) · vf_i
+
+    ``clip(D, d1, d2) − d1`` is the case-collapsed form of the textbook
+    ``min(D, d2) − d1 − min(D − d1, 0)`` (bitwise equal for d1 ≤ d2):
+    one elementwise pass instead of three.
+    """
+    d1e = d1[..., None]
+    shift = (jnp.minimum(D, d1e) - d1e) * vf[..., None]
+    contrib = (jnp.clip(D, d1e, d2[..., None]) - d1e) * vf[..., None]
+    A = jnp.sum(shift, axis=-2)
+    B = jnp.einsum("...ij,...il->...jl", contrib, n_onehot)
+    return A, B
