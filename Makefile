@@ -1,7 +1,7 @@
 PY ?= python
 
 .PHONY: test ci bench-async bench-fleet bench-fleet-smoke \
-	bench-fleet-sharded bench-selection
+	bench-fleet-sharded bench-selection bench-fleet-workloads
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -33,8 +33,14 @@ bench-fleet-smoke:
 # gates on fused == pre-fusion medoid parity either way
 bench-selection:
 	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
-		--smoke --skip-engine --skip-scenarios \
+		--smoke --skip-engine --skip-scenarios --skip-workloads \
 		--min-selection-speedup 1.0
+
+# per-workload fleet rounds (mlp/cnn/charlm/xlstm through the batched
+# fleet runtime + loop round-0 parity); recorded in BENCH_fleet.json
+bench-fleet-workloads:
+	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
+		--smoke --skip-engine --skip-scenarios --skip-selection
 
 # sharded-engine scaling sweep: one subprocess per device count (XLA
 # forced host-platform devices on CPU); gates on sharded==batched parity
@@ -45,4 +51,4 @@ bench-selection:
 bench-fleet-sharded:
 	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
 		--smoke --skip-engine --skip-scenarios --skip-selection \
-		--device-sweep 1,2,4 --min-scaling 1.0
+		--skip-workloads --device-sweep 1,2,4 --min-scaling 1.0

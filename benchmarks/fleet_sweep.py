@@ -25,6 +25,15 @@ Two measurements in one harness:
    server and the async event runtime at smoke scale, so regressions in
    either path show up as a changed loss/makespan row.
 
+3b. **Workload matrix** — every registered ``FleetWorkload`` (mlp, cnn,
+   charlm, xlstm) driven through the batched fleet runtime at smoke
+   scale with a per-round history recorded under
+   ``BENCH_fleet.json["workloads"]``, plus a batched-vs-loop round-0
+   parity gate per workload (the rigorous cross-engine matrix lives in
+   ``tests/test_workload_conformance.py``).  ``--workload`` additionally
+   selects which workload the engine/selection benchmarks (1) and (2)
+   run on — the tracked selection gate stays on the default ``mlp``.
+
 4. **Sharded device sweep** (``--device-sweep 1,2,4``) — the mesh-sharded
    engine (``repro.fed.fleet.sharded``) timed at increasing device
    counts on the same fleet, one subprocess per count (XLA fixes the
@@ -63,6 +72,7 @@ from repro.fed.fleet.batched import (FleetConfig, FleetEngine,
                                      make_cohort_groups, nominal_budgets,
                                      run_fleet_round)
 from repro.fed.fleet.scenarios import SCENARIOS, build_scenario, run_scenario
+from repro.fed.fleet.workloads import WORKLOADS, client_sizes, get_workload
 from repro.fed.simulator import straggler_deadline
 from repro.models.small import LogisticRegression
 from repro.utils.xla_env import forced_host_device_env
@@ -77,17 +87,18 @@ def _max_param_diff(a, b) -> float:
 
 
 def _engine_workload(n_clients: int, epochs: int, batch_size: int,
-                     seed: int, use_kernel):
-    """Shared builder for the engine/selection benchmarks: the 1024-client
-    device-class fleet, its cohort grouping (timed — the round driver runs
-    it once per round either way), and the round-start params."""
-    clients = synthetic_dataset(0.5, 0.5, n_clients=n_clients,
-                                mean_samples=48.0, std_samples=32.0,
-                                seed=seed)
+                     seed: int, use_kernel, workload: str = "mlp"):
+    """Shared builder for the engine/selection benchmarks: an n-client
+    device-class fleet of the chosen ``FleetWorkload`` (default mlp —
+    byte-identical to the pre-workload-axis synthetic-logreg fleet), its
+    cohort grouping (timed — the round driver runs it once per round
+    either way), and the round-start params."""
+    wl = get_workload(workload)
+    clients = wl.make_clients(n_clients=n_clients, seed=seed,
+                              mean_samples=48.0, std_samples=32.0)
     train, _ = train_test_split_clients(clients, test_frac=0.2)
-    sizes = [len(d["y"]) for d in train]
-    specs, _ = build_scenario("device_classes", sizes, seed)
-    model = LogisticRegression()
+    specs, _ = build_scenario("device_classes", client_sizes(train), seed)
+    model = wl
     cfg = FleetConfig(epochs=epochs, batch_size=batch_size, lr=0.05,
                       seed=seed, use_kernel=use_kernel)
     deadline = straggler_deadline(specs, cfg.epochs, 30.0)
@@ -102,7 +113,7 @@ def _engine_workload(n_clients: int, epochs: int, batch_size: int,
 
 def bench_selection(n_clients: int, epochs: int, batch_size: int,
                     seed: int = 0, use_kernel=None, reps: int = 3,
-                    verbose: bool = False) -> Dict:
+                    workload: str = "mlp", verbose: bool = False) -> Dict:
     """Selection-phase breakdown: fused single-dispatch program vs the
     pre-fusion 3-dispatch chain, plus a Pallas-kernel on/off A-B.
 
@@ -116,7 +127,7 @@ def bench_selection(n_clients: int, epochs: int, batch_size: int,
     """
     from repro.kernels.ops import resolve_use_kernel
     model, _, _, cfg, _, params, groups, _ = _engine_workload(
-        n_clients, epochs, batch_size, seed, use_kernel)
+        n_clients, epochs, batch_size, seed, use_kernel, workload)
     sgroups = [g for g in groups if g.k > 0]
     if not sgroups:
         raise RuntimeError("selection benchmark found no straggler groups")
@@ -155,6 +166,7 @@ def bench_selection(n_clients: int, epochs: int, batch_size: int,
         _, _, ab[label] = measure(eng, True, f"kernel-{label}")
 
     return {
+        "workload": workload,
         "n_clients": n_clients,
         "epochs": epochs,
         "n_straggler_groups": len(sgroups),
@@ -180,7 +192,7 @@ def bench_selection(n_clients: int, epochs: int, batch_size: int,
 
 
 def bench_engine(n_clients: int, epochs: int, batch_size: int,
-                 seed: int = 0, use_kernel=None,
+                 seed: int = 0, use_kernel=None, workload: str = "mlp",
                  verbose: bool = False) -> Dict:
     """Time one identical 1024-client round through both engines."""
     # identical workload to bench_selection (one shared builder), with the
@@ -188,7 +200,8 @@ def bench_engine(n_clients: int, epochs: int, batch_size: int,
     # *engine execution*: every group through run_group + aggregate,
     # exactly what run_fleet_round executes
     model, train, specs, cfg, budgets, params, groups, prep_s = \
-        _engine_workload(n_clients, epochs, batch_size, seed, use_kernel)
+        _engine_workload(n_clients, epochs, batch_size, seed, use_kernel,
+                         workload)
     engine = FleetEngine(model, cfg)
     cids = list(range(len(specs)))
 
@@ -221,6 +234,7 @@ def bench_engine(n_clients: int, epochs: int, batch_size: int,
     makespan = max(sb.work[i] / specs[c].c
                    for i, c in enumerate(sb.cids))
     return {
+        "workload": workload,
         "n_clients": n_clients,
         "epochs": epochs,
         "batch_size": batch_size,
@@ -336,6 +350,56 @@ def bench_sharded_scaling(device_counts: List[int], n_clients: int,
     }
 
 
+def sweep_workloads(names, rounds: int, epochs: int, n_clients: int = 24,
+                    seed: int = 0, verbose: bool = False) -> Dict:
+    """Per-workload fleet rounds: every registered ``FleetWorkload``
+    through the batched fleet runtime via the scenario registry, with a
+    per-round history row and a batched-vs-loop round-0 parity gate
+    (identical train loss / test acc to float32 tolerance)."""
+    table = {}
+    for name in names:
+        wl = get_workload(name)
+        clients = wl.make_clients(n_clients=n_clients, seed=seed)
+        train, test = train_test_split_clients(clients, test_frac=0.2)
+        t0 = time.perf_counter()
+        out = run_scenario("device_classes", "fleet", clients_data=train,
+                           test_data=test, workload=wl, seed=seed,
+                           rounds=rounds, epochs=epochs, batch_size=8,
+                           fleet_engine="batched")
+        wall = time.perf_counter() - t0
+        ref = run_scenario("device_classes", "fleet", clients_data=train,
+                           test_data=test, workload=wl, seed=seed,
+                           rounds=1, epochs=epochs, batch_size=8,
+                           fleet_engine="loop")
+        h0, r0 = out["history"][0], ref["history"][0]
+        parity = (abs(h0.train_loss - r0.train_loss) < 1e-4
+                  and abs(h0.test_acc - r0.test_acc) < 1e-4)
+        hist = out["history"]
+        table[name] = {
+            "description": wl.description,
+            "n_clients": len(train),
+            "batched_wall_s": wall,
+            "final_train_loss": float(hist[-1].train_loss),
+            "final_test_acc": float(hist[-1].test_acc),
+            "n_coreset_total": int(sum(r.n_coreset for r in hist)),
+            "parity_loop_round0": bool(parity),
+            "rounds": [{
+                "round": r.round,
+                "train_loss": float(r.train_loss),
+                "test_acc": float(r.test_acc),
+                "sim_round_time": float(r.sim_round_time),
+                "n_coreset": int(r.n_coreset),
+            } for r in hist],
+        }
+        if verbose:
+            print(f"  {name:8s} loss={table[name]['final_train_loss']:.3f} "
+                  f"acc={table[name]['final_test_acc']:.3f} "
+                  f"core={table[name]['n_coreset_total']:3d} "
+                  f"wall={wall:6.2f}s "
+                  f"parity={'PASS' if parity else 'FAIL'}")
+    return table
+
+
 def sweep_scenarios(n_clients: int, rounds: int, epochs: int,
                     seed: int = 0, verbose: bool = False) -> Dict:
     """Every named scenario through both the sync server and the async
@@ -386,6 +450,14 @@ def main(argv=None) -> int:
                     help="tri-state Pallas switch for the selection fast "
                          "path: auto = kernels on supported backends, jnp "
                          "fallback otherwise (FleetConfig.use_kernel)")
+    ap.add_argument("--workload", choices=tuple(sorted(WORKLOADS)),
+                    default="mlp",
+                    help="FleetWorkload for the engine/selection "
+                         "benchmarks (the tracked selection gate runs on "
+                         "the default mlp); the workload matrix section "
+                         "always sweeps every registered workload")
+    ap.add_argument("--skip-workloads", action="store_true",
+                    help="skip the per-workload fleet-rounds matrix")
     ap.add_argument("--skip-scenarios", action="store_true")
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--skip-selection", action="store_true",
@@ -426,11 +498,11 @@ def main(argv=None) -> int:
     ok = True
 
     if not args.skip_engine:
-        print(f"== engine: one {n_clients}-client round, "
-              f"batched vs per-client loop")
+        print(f"== engine: one {n_clients}-client round "
+              f"({args.workload}), batched vs per-client loop")
         eng = bench_engine(n_clients, epochs, args.batch_size,
                            seed=args.seed, use_kernel=use_kernel,
-                           verbose=True)
+                           workload=args.workload, verbose=True)
         report["engine"] = eng
         print(f"  clients/sec (batched): {eng['clients_per_sec']:10.1f}")
         print(f"  round makespan (virtual): "
@@ -453,6 +525,7 @@ def main(argv=None) -> int:
               f"(kernels: {args.use_kernel})")
         sel = bench_selection(n_clients, epochs, args.batch_size,
                               seed=args.seed, use_kernel=use_kernel,
+                              workload=args.workload,
                               verbose=args.verbose)
         report["selection"] = sel
         print(f"  {sel['n_coreset_clients']} coreset clients in "
@@ -473,6 +546,20 @@ def main(argv=None) -> int:
               f"{sel['selection_speedup']:.2f}x >= "
               f"{args.min_selection_speedup:.1f}x")
         ok = ok and sel_parity and sel_fast
+
+    if not args.skip_workloads:
+        wl_rounds = 2 if args.smoke else 4
+        names = tuple(sorted(WORKLOADS))
+        print(f"\n== workloads: {len(names)} FleetWorkloads x fleet "
+              f"runtime ({wl_rounds} rounds, batched + loop parity)")
+        report["workloads"] = sweep_workloads(
+            names, wl_rounds, epochs=2 if args.smoke else 3,
+            seed=args.seed, verbose=True)
+        wl_parity = all(row["parity_loop_round0"]
+                        for row in report["workloads"].values())
+        print(f"  [{'PASS' if wl_parity else 'FAIL'}] batched==loop "
+              f"round-0 parity on every workload")
+        ok = ok and wl_parity
 
     if not args.skip_scenarios:
         sc_clients = 24 if args.smoke else 64

@@ -1,7 +1,11 @@
-"""Fleet-scale FedCore demo: adaptive participation over a 512-client
-device-class mixture, executed by the batched engine.
+"""Fleet-scale FedCore demo: adaptive participation over a device-class
+mixture, executed by the batched engine on any registered FleetWorkload
+(default: a SmallCNN image fleet).
 
-Shows the three fleet pieces working together:
+Shows the four fleet pieces working together:
+  * a ``FleetWorkload`` from the registry supplies the model, the data
+    schema, and the federated dataset builder (``--workload`` picks
+    mlp / cnn / charlm / xlstm — model diversity is one axis);
   * a named scenario ("device_classes") materializes specs + a capability
     trace from the registry;
   * an ``AdaptiveParticipation`` scheduler starts with the 16 fastest
@@ -11,7 +15,8 @@ Shows the three fleet pieces working together:
   * ``run_fleet`` executes every round's whole cohort as a few vmapped
     XLA programs — no per-client Python loop.
 
-  PYTHONPATH=src python examples/fleet_demo.py
+  PYTHONPATH=src python examples/fleet_demo.py                 # CNN fleet
+  PYTHONPATH=src python examples/fleet_demo.py --workload charlm
   # mesh-sharded execution over N virtual CPU devices:
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
       PYTHONPATH=src python examples/fleet_demo.py --engine sharded
@@ -20,13 +25,13 @@ from __future__ import annotations
 
 import argparse
 
-import numpy as np
-
 from repro.data.partition import train_test_split_clients
-from repro.data.synthetic import synthetic_dataset
 from repro.fed.fleet import (AdaptiveParticipation, FleetConfig,
-                             ParticipationConfig, build_scenario, run_fleet)
-from repro.models.small import LogisticRegression
+                             ParticipationConfig, build_scenario,
+                             client_sizes, get_workload, run_fleet)
+
+# fleet sizes per workload, scaled so the demo stays interactive on CPU
+N_CLIENTS = {"mlp": 512, "cnn": 256, "charlm": 128, "xlstm": 128}
 
 
 def main() -> None:
@@ -36,20 +41,27 @@ def main() -> None:
                     help="fleet execution model; 'sharded' runs cohort "
                          "groups data-parallel over all devices (falls "
                          "back to batched on a one-device host)")
+    ap.add_argument("--workload", default="cnn",
+                    choices=tuple(sorted(N_CLIENTS)),
+                    help="FleetWorkload to run (model + data schema + "
+                         "dataset builder from the registry)")
+    ap.add_argument("--rounds", type=int, default=8)
     args = ap.parse_args()
-    n_clients = 512
-    clients = synthetic_dataset(0.5, 0.5, n_clients=n_clients,
-                                mean_samples=48.0, std_samples=32.0, seed=0)
-    train, test = train_test_split_clients(clients, test_frac=0.2)
-    sizes = [len(d["y"]) for d in train]
-    specs, trace = build_scenario("device_classes", sizes, seed=0)
 
-    model = LogisticRegression()
+    workload = get_workload(args.workload)
+    n_clients = N_CLIENTS[args.workload]
+    clients = workload.make_clients(n_clients=n_clients, seed=0)
+    workload.validate_clients(clients)
+    train, test = train_test_split_clients(clients, test_frac=0.2)
+    specs, trace = build_scenario("device_classes", client_sizes(train),
+                                  seed=0)
+
     scheduler = AdaptiveParticipation(specs, ParticipationConfig(
         min_cohort=16, growth_factor=2.0, plateau_tol=0.02))
     cfg = FleetConfig(epochs=2, batch_size=32, lr=0.05, seed=0)
 
-    out = run_fleet(model, train, specs, cfg, rounds=8,
+    print(f"workload: {workload.name} — {workload.description}")
+    out = run_fleet(workload, train, specs, cfg, rounds=args.rounds,
                     scheduler=scheduler, trace=trace, test_data=test,
                     engine=args.engine, verbose=True)
 

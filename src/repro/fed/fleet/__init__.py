@@ -21,3 +21,12 @@ from repro.fed.fleet.sharded import (  # noqa: F401
     ShardedFleetEngine,
     client_mesh,
 )
+from repro.fed.fleet.workloads import (  # noqa: F401
+    WORKLOADS,
+    ArraySpec,
+    CharXLSTM,
+    FleetWorkload,
+    client_num_samples,
+    client_sizes,
+    get_workload,
+)

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.coreset import (build_coreset_batched, coreset_budget,
                                 needs_coreset)
+from repro.fed.fleet.workloads import client_num_samples
 from repro.fed.server import RoundRecord, make_eval_fn
 from repro.fed.simulator import (CapabilityTrace, ClientSpec, TraceConfig,
                                  straggler_deadline)
@@ -73,9 +74,15 @@ class CohortGroup:
     Arrays stay host-side (numpy): the batched engine moves each group to
     the device as one stack, while the loop reference converts one
     client's slice per dispatch — exactly the transfer pattern each
-    execution model would have in production."""
+    execution model would have in production.
+
+    ``data`` is a pytree of stacked (C, M, ...) arrays whose top level is
+    a dict of named fields (the workload's schema — e.g. flat features,
+    image tensors, or token sequences); everything below may be nested
+    arbitrarily.  The engines only touch it through ``jax.tree`` ops, so
+    no field name or rank is assumed anywhere."""
     cids: np.ndarray              # (C,) global client ids
-    data: Dict[str, np.ndarray]   # stacked (C, M, ...) padded client data
+    data: Pytree                  # stacked (C, M, ...) padded client data
     valid: np.ndarray             # (C, M) bool — real-sample mask
     m: np.ndarray                 # (C,) true sizes
     k: int                        # coreset budget (0 = full-set training)
@@ -131,25 +138,35 @@ def nominal_budgets(specs: Sequence[ClientSpec], deadline: float,
             for s in specs}
 
 
-def make_cohort_groups(clients_data: Sequence[Dict[str, np.ndarray]],
+def _strip_weights(data: Pytree) -> Pytree:
+    """Drop a caller-supplied top-level ``weights`` field (the engines
+    derive loss weights from the padding mask)."""
+    if isinstance(data, dict) and "weights" in data:
+        return {kk: v for kk, v in data.items() if kk != "weights"}
+    return data
+
+
+def make_cohort_groups(clients_data: Sequence[Pytree],
                        cids: Sequence[int], budgets: Dict[int, int],
                        cfg: FleetConfig, round_seed: int = 0
                        ) -> List[CohortGroup]:
     """Bucket a cohort into same-shape groups.
 
-    ``budgets[cid]`` is the client's coreset budget; ``budgets[cid] >= m``
-    means full-set training.  Padded size M is the next power-of-two number
-    of batches; coreset budgets are quantized down to a power of **four**
-    (``_floor_pow4`` — the coarse ×4 ladder keeps the number of distinct
-    compiled group programs small) so a group shares one static k (never
-    exceeding any member's deadline budget).  Per-client epoch
-    permutations are drawn from
+    ``clients_data[cid]`` is any pytree of arrays sharing a leading sample
+    axis (dict top level; see ``CohortGroup.data``) — the grouping logic
+    is schema-generic.  ``budgets[cid]`` is the client's coreset budget;
+    ``budgets[cid] >= m`` means full-set training.  Padded size M is the
+    next power-of-two number of batches; coreset budgets are quantized
+    down to a power of **four** (``_floor_pow4`` — the coarse ×4 ladder
+    keeps the number of distinct compiled group programs small) so a
+    group shares one static k (never exceeding any member's deadline
+    budget).  Per-client epoch permutations are drawn from
     ``(cfg.seed, round_seed, cid)`` streams: the grouping is a pure
     performance choice and cannot change any client's arithmetic.
     """
     by_key: Dict[Tuple[int, int], List[int]] = {}
     for cid in cids:
-        m = len(next(iter(clients_data[cid].values())))
+        m = client_num_samples(clients_data[cid])
         m_pad = _next_pow2(-(-m // cfg.batch_size)) * cfg.batch_size
         b = int(budgets[cid])
         k = 0 if b >= m else _floor_pow4(b)
@@ -157,13 +174,11 @@ def make_cohort_groups(clients_data: Sequence[Dict[str, np.ndarray]],
 
     groups = []
     for (m_pad, k), members in sorted(by_key.items()):
-        stacked: Dict[str, np.ndarray] = {}
-        keys = [kk for kk in clients_data[members[0]] if kk != "weights"]
-        for kk in keys:
-            stacked[kk] = np.stack([
-                _pad_rows(np.asarray(clients_data[cid][kk]), m_pad)
-                for cid in members])
-        ms = np.array([len(next(iter(clients_data[cid].values())))
+        stacked = jax.tree.map(
+            lambda *vs: np.stack([_pad_rows(np.asarray(v), m_pad)
+                                  for v in vs]),
+            *[_strip_weights(clients_data[cid]) for cid in members])
+        ms = np.array([client_num_samples(clients_data[cid])
                        for cid in members])
         valid = np.arange(m_pad)[None, :] < ms[:, None]
         base = np.tile(np.arange(m_pad), (cfg.epochs, 1))
@@ -206,7 +221,7 @@ class FleetEngine:
 
         def sgd_step(p, data, w, ix):
             """One mini-batch SGD step for one client."""
-            batch = {kk: v[ix] for kk, v in data.items()}
+            batch = dict(jax.tree.map(lambda v: v[ix], data))
             batch["weights"] = w[ix]
             (loss, _), g = jax.value_and_grad(
                 model.loss, has_aux=True)(p, batch)
@@ -240,10 +255,12 @@ class FleetEngine:
         # all three execution modes share one copy of the arithmetic
         self._sgd_scan = sgd_scan
         self._core_scan = core_scan
-        # fused per-group round programs, compiled per (k, data keys)
-        self._group_programs: Dict[Tuple[int, Tuple[str, ...]], Any] = {}
+        # fused per-group round programs, compiled per (k, data treedef) —
+        # the treedef key is what lets schema-diverse workloads (images,
+        # token sequences, nested field trees) share one engine instance
+        self._group_programs: Dict[Tuple[int, Any], Any] = {}
         # fused selection-only programs (benchmark A/B + dispatch tests)
-        self._select_programs: Dict[Tuple[int, Tuple[str, ...]], Any] = {}
+        self._select_programs: Dict[Tuple[int, Any], Any] = {}
         # standalone batched feature pass: first stage of the pre-fusion
         # dispatch chain, kept as the selection benchmark's baseline
         self._feats = jax.jit(jax.vmap(
@@ -291,8 +308,8 @@ class FleetEngine:
                 feats, valid, k, use_kernel=cfg.use_kernel,
                 max_sweeps=cfg.max_sweeps)
             p, _ = vm_sgd(p0, data, w, idx1)
-            cdata = {kk: vm_gather(v, coreset.indices)
-                     for kk, v in data.items()}            # (C, k, ...)
+            cdata = jax.tree.map(
+                lambda v: vm_gather(v, coreset.indices), data)  # (C, k, ...)
             p, losses = vm_core(p, cdata, coreset.weights, steps)
             return p, losses, coreset.indices
         return body
@@ -305,8 +322,8 @@ class FleetEngine:
         only accelerators opt in."""
         return (1, 2) if jax.default_backend() != "cpu" else ()
 
-    def _group_program(self, k: int, data_keys: Tuple[str, ...]):
-        key = (k, data_keys)
+    def _group_program(self, k: int, data_treedef):
+        key = (k, data_treedef)
         fn = self._group_programs.get(key)
         if fn is None:
             fn = jax.jit(self._make_group_body(k),
@@ -314,10 +331,10 @@ class FleetEngine:
             self._group_programs[key] = fn
         return fn
 
-    def _selection_program(self, k: int, data_keys: Tuple[str, ...]):
+    def _selection_program(self, k: int, data_treedef):
         """Selection phase only (features → distances → k-medoids) as one
         jitted dispatch — the benchmark's fused measurement unit."""
-        key = (k, data_keys)
+        key = (k, data_treedef)
         fn = self._select_programs.get(key)
         if fn is None:
             cfg = self.cfg
@@ -349,10 +366,11 @@ class FleetEngine:
         if group.k == 0:
             raise ValueError("group has no selection phase (k == 0)")
         cfg = self.cfg
-        data = {kk: jnp.asarray(v) for kk, v in group.data.items()}
+        data = jax.tree.map(jnp.asarray, group.data)
         valid = jnp.asarray(group.valid)
         if fused:
-            program = self._selection_program(group.k, tuple(sorted(data)))
+            program = self._selection_program(group.k,
+                                              jax.tree.structure(data))
             self.dispatch_count += 1
             return program(params, data, valid), 1
         from repro.core.coreset import Coreset
@@ -399,11 +417,11 @@ class FleetEngine:
         # host-side slice, then one device transfer per call: the batched
         # path ships the whole group at once, the loop path one client at
         # a time
-        data = {kk: jnp.asarray(v[sl]) for kk, v in group.data.items()}
-        c = len(next(iter(data.values())))
+        data = jax.tree.map(lambda v: jnp.asarray(v[sl]), group.data)
+        c = int(jax.tree.leaves(data)[0].shape[0])
         w = jnp.asarray(group.valid[sl].astype(np.float32))  # (C, M)
         p0 = self._broadcast_params(params, c)
-        program = self._group_program(group.k, tuple(sorted(data)))
+        program = self._group_program(group.k, jax.tree.structure(data))
         self.dispatch_count += 1
 
         if group.k == 0:    # full-set: E epochs of minibatch SGD
@@ -426,7 +444,7 @@ class FleetEngine:
         (the ``LocalTrainer.run_epochs`` model), identical arithmetic to
         the vmapped lane."""
         cfg = self.cfg
-        data = {kk: jnp.asarray(v[c]) for kk, v in group.data.items()}
+        data = jax.tree.map(lambda v: jnp.asarray(v[c]), group.data)
         w = jnp.asarray(group.valid[c].astype(np.float32))
         m_pad = group.valid.shape[1]
         idx = group.perms[c].reshape(cfg.epochs,
@@ -451,7 +469,8 @@ class FleetEngine:
             use_kernel=cfg.use_kernel, max_sweeps=cfg.max_sweeps)
         p, _ = run_epoch(params, 0)
         med = np.asarray(coreset.indices[0])
-        cdata = {kk: v[jnp.asarray(med)] for kk, v in data.items()}
+        mix = jnp.asarray(med)
+        cdata = jax.tree.map(lambda v: v[mix], data)
         cw = coreset.weights[0]
         loss = 0.0
         for _ in range(max(cfg.epochs - 1, 1)):
@@ -509,7 +528,7 @@ def _cat(parts: List[np.ndarray], dtype) -> np.ndarray:
 
 
 def run_fleet_round(engine: FleetEngine, params: Pytree,
-                    clients_data: Sequence[Dict[str, np.ndarray]],
+                    clients_data: Sequence[Pytree],
                     cids: Sequence[int], budgets: Dict[int, int],
                     round_seed: int = 0, batched: bool = True,
                     groups: Optional[List[CohortGroup]] = None,
@@ -578,7 +597,7 @@ def run_fleet_round(engine: FleetEngine, params: Pytree,
     return new_params, stats
 
 
-def run_fleet(model, clients_data: Sequence[Dict[str, np.ndarray]],
+def run_fleet(model, clients_data: Sequence[Pytree],
               specs: Sequence[ClientSpec], cfg: FleetConfig, rounds: int,
               scheduler=None, trace: Optional[TraceConfig] = None,
               deadline: Optional[float] = None,
@@ -588,6 +607,10 @@ def run_fleet(model, clients_data: Sequence[Dict[str, np.ndarray]],
               verbose: bool = False) -> Dict[str, Any]:
     """Multi-round fleet driver: adaptive cohorts + batched execution.
 
+    ``model`` is anything exposing the FLModel interface — including a
+    ``repro.fed.fleet.workloads.FleetWorkload``, which is how the CNN and
+    char-LM workloads run here; ``clients_data`` is the matching pytree-
+    of-arrays client list (see ``CohortGroup.data``).
     ``engine`` ∈ {"batched", "loop", "sharded"}: the vmapped cohort
     programs, the per-client reference loop, or the mesh-sharded engine
     (``repro.fed.fleet.sharded``) that runs each cohort group

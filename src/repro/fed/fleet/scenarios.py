@@ -31,6 +31,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.fed.fleet.workloads import FleetWorkload, client_sizes, get_workload
 from repro.fed.simulator import ClientSpec, TraceConfig
 
 
@@ -113,7 +114,7 @@ def build_scenario(name: str, sizes: Sequence[int], seed: int = 0
     return specs, scenario.trace_config(seed)
 
 
-def run_scenario(name: str, runtime: str, model, clients_data,
+def run_scenario(name: str, runtime: str, model=None, clients_data=None,
                  test_data: Optional[Dict] = None, *, seed: int = 0,
                  rounds: int = 5, clients_per_round: int = 8,
                  epochs: int = 3, batch_size: int = 8, lr: float = 0.05,
@@ -122,6 +123,7 @@ def run_scenario(name: str, runtime: str, model, clients_data,
                  scheduler=None, aggregator=None,
                  fleet_engine: str = "batched",
                  use_kernel: Optional[bool] = None,
+                 workload=None, n_clients: int = 24,
                  verbose: bool = False) -> Dict[str, Any]:
     """Drive one named scenario through one runtime.
 
@@ -134,8 +136,16 @@ def run_scenario(name: str, runtime: str, model, clients_data,
     the mesh-sharded engine, falling back to batched on one device).
     ``use_kernel`` is the tri-state Pallas switch for the coreset
     selection fast path (None = auto by backend), threaded into whichever
-    runtime's config does the selecting.  The result dict gains
-    ``scenario`` and ``runtime`` keys.
+    runtime's config does the selecting.
+
+    ``workload`` is the model-diversity axis: a registry name
+    (``"mlp"``/``"cnn"``/``"charlm"``/``"xlstm"``) or a ``FleetWorkload``
+    instance.  When given, it supplies the model (``model`` may then be
+    omitted), and — if ``clients_data`` is also omitted — builds an
+    ``n_clients``-client federated dataset from its own generator,
+    validated against the workload's declared schema.  The result dict
+    gains ``scenario``, ``runtime``, and (with a workload) ``workload``
+    keys.
     """
     # late imports: repro.fed.{server,events,strategies} import nothing from
     # fleet, keeping this the only direction of coupling
@@ -145,7 +155,18 @@ def run_scenario(name: str, runtime: str, model, clients_data,
     from repro.fed.server import FLConfig, run_federated
     from repro.fed.strategies import FedCore, LocalTrainer
 
-    sizes = [len(next(iter(d.values()))) for d in clients_data]
+    wl: Optional[FleetWorkload] = None
+    if workload is not None:
+        wl = (workload if isinstance(workload, FleetWorkload)
+              else get_workload(workload))
+        model = wl if model is None else model
+        if clients_data is None:
+            clients_data = wl.make_clients(n_clients=n_clients, seed=seed)
+        wl.validate_clients(clients_data)
+    if model is None or clients_data is None:
+        raise ValueError("run_scenario needs model + clients_data, or a "
+                         "workload to build them from")
+    sizes = client_sizes(clients_data)
     specs, trace = build_scenario(name, sizes, seed)
     core_cfg = FedCoreConfig(use_kernel=use_kernel)
 
@@ -179,4 +200,6 @@ def run_scenario(name: str, runtime: str, model, clients_data,
         raise ValueError(f"unknown runtime {runtime!r}")
     out["scenario"] = name
     out["runtime"] = runtime
+    if wl is not None:
+        out["workload"] = wl.name
     return out

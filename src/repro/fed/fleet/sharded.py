@@ -86,14 +86,15 @@ class ShardedFleetEngine(FleetEngine):
         super().__init__(model, cfg)
         self.mesh = mesh if mesh is not None else client_mesh()
         self.n_devices = int(self.mesh.shape[CLIENT_AXIS])
-        # (k, sorted data keys) -> jitted shard_mapped group program;
-        # jit handles shape polymorphism within one entry
-        self._programs: Dict[Tuple[int, Tuple[str, ...]], Any] = {}
+        # (k, data treedef) -> jitted shard_mapped group program; jit
+        # handles shape polymorphism within one entry, and the treedef key
+        # makes the cache schema-generic (any pytree-of-arrays workload)
+        self._programs: Dict[Tuple[int, Any], Any] = {}
 
     # -- program construction --------------------------------------------
 
-    def _program(self, k: int, data_keys: Tuple[str, ...]):
-        key = (k, data_keys)
+    def _program(self, k: int, data_treedef):
+        key = (k, data_treedef)
         fn = self._programs.get(key)
         if fn is None:
             fn = self._build_program(k)
@@ -170,15 +171,16 @@ class ShardedFleetEngine(FleetEngine):
         pad = (-c) % self.n_devices
         lane_w = np.concatenate(
             [np.asarray(weights, np.float32), np.zeros(pad, np.float32)])
-        data = {kk: self._shard_put(_pad_lanes(v, pad))
-                for kk, v in sorted(group.data.items())}
+        data = jax.tree.map(
+            lambda v: self._shard_put(_pad_lanes(np.asarray(v), pad)),
+            group.data)
         w = self._shard_put(
             _pad_lanes(group.valid.astype(np.float32), pad))
         lane_w = self._shard_put(lane_w)
         m_pad = group.valid.shape[1]
         t_full = cfg.epochs * (m_pad // cfg.batch_size)
         idx_all = group.perms.reshape(c, t_full, cfg.batch_size)
-        program = self._program(group.k, tuple(sorted(group.data)))
+        program = self._program(group.k, jax.tree.structure(data))
         self.dispatch_count += 1
 
         # outputs stay device-resident (lazy): materializing here would

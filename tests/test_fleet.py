@@ -11,8 +11,6 @@ import pytest
 from repro.core.coreset import coreset_budget
 from repro.core.kmedoids import (kmedoids_batched, kmedoids_jax,
                                  kmedoids_masked, pairwise_sq_dists)
-from repro.data.partition import train_test_split_clients
-from repro.data.synthetic import synthetic_dataset
 from repro.fed.fleet.batched import (FleetConfig, FleetEngine, _floor_pow4,
                                      _next_pow2, make_cohort_groups,
                                      nominal_budgets, run_fleet,
@@ -21,20 +19,17 @@ from repro.fed.fleet.scenarios import SCENARIOS, build_scenario, run_scenario
 from repro.fed.fleet.scheduler import (AdaptiveParticipation,
                                        ParticipationConfig)
 from repro.fed.fleet.sharded import ShardedFleetEngine, client_mesh
-from repro.fed.simulator import (ClientSpec, TraceConfig, make_client_specs,
+from repro.fed.simulator import (ClientSpec, TraceConfig,
                                  straggler_deadline)
 from repro.kernels.ops import pairwise_l2, pairwise_l2_batched
-from repro.models.small import LogisticRegression
 
 
 @pytest.fixture(scope="module")
-def fleet_fl():
-    clients = synthetic_dataset(0.5, 0.5, n_clients=16, mean_samples=60,
-                                std_samples=40, seed=3)
-    train, test = train_test_split_clients(clients)
-    rng = np.random.default_rng(3)
-    specs = make_client_specs([len(d["y"]) for d in train], rng)
-    return LogisticRegression(), train, test, specs
+def fleet_fl(fleet_bundles):
+    # the deduped mlp bundle from conftest: same data/specs the sharded
+    # and conformance suites build from
+    b = fleet_bundles(workload="mlp", n_clients=16, seed=3)
+    return b.model, b.train, b.test, b.specs
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,88 @@
+"""Hypothesis property tests for cohort grouping and the pow-4 budget
+quantizer (auto-skip when hypothesis is absent, like the MoE properties).
+
+Invariants under arbitrary size/budget draws:
+  * every cohort client appears in exactly one group (exact partition);
+  * a group's padded size is the next power-of-two number of batches;
+  * the quantized group budget k is a power of four that never exceeds
+    any member's requested budget nor its count of valid (real) rows;
+  * per-client epoch permutations are true permutations of the padded
+    range, and the valid mask counts exactly m real rows;
+  * an empty cohort yields no groups (the driver's no-op round contract).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.fed.fleet.batched import (_floor_pow4, _next_pow2,  # noqa: E402
+                                     FleetConfig, make_cohort_groups)
+
+
+def _is_pow4(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0 and (n.bit_length() - 1) % 2 == 0
+
+
+@given(st.integers(min_value=1, max_value=10**9))
+def test_floor_pow4_quantizer_properties(n):
+    q = _floor_pow4(n)
+    assert _is_pow4(q)
+    assert q <= n < 4 * q          # tightest pow-4 below: floor semantics
+
+
+@given(st.integers(min_value=1, max_value=10**6))
+def test_next_pow2_properties(n):
+    p = _next_pow2(n)
+    assert p >= n and (p & (p - 1)) == 0
+    assert p < 2 * n or n == 1     # tightest pow-2 at or above
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_cohort_group_invariants(data):
+    n = data.draw(st.integers(min_value=0, max_value=10), label="n_clients")
+    batch_size = data.draw(st.sampled_from([2, 4, 8]), label="batch_size")
+    epochs = data.draw(st.integers(min_value=1, max_value=3), label="epochs")
+    sizes = data.draw(st.lists(st.integers(min_value=1, max_value=70),
+                               min_size=n, max_size=n), label="sizes")
+    budgets = {i: data.draw(st.integers(min_value=1, max_value=100),
+                            label=f"budget[{i}]") for i in range(n)}
+    clients = [{"x": np.zeros((m, 3), np.float32),
+                "y": np.zeros(m, np.int32)} for m in sizes]
+    cfg = FleetConfig(epochs=epochs, batch_size=batch_size, seed=0)
+    groups = make_cohort_groups(clients, list(range(n)), budgets, cfg,
+                                round_seed=1)
+
+    if n == 0:                     # empty-cohort invariant
+        assert groups == []
+        return
+
+    # exact partition: every client in exactly one group
+    seen = np.concatenate([g.cids for g in groups])
+    assert sorted(seen.tolist()) == list(range(n))
+
+    for g in groups:
+        c, m_pad = g.valid.shape
+        assert len(g.cids) == c == len(g.m)
+        # padded size is the next pow2 number of batches
+        for i, cid in enumerate(g.cids):
+            m = sizes[cid]
+            assert m_pad == _next_pow2(-(-m // batch_size)) * batch_size
+            assert g.m[i] == m == g.valid[i].sum()
+            assert g.valid[i, :m].all() and not g.valid[i, m:].any()
+        # quantized budget: pow4, never above any member's request or
+        # its valid rows (k == 0 means full-set training)
+        if g.k > 0:
+            assert _is_pow4(g.k)
+            for i, cid in enumerate(g.cids):
+                assert g.k <= budgets[cid]
+                assert g.k <= g.m[i]           # never exceeds valid rows
+        else:
+            assert all(budgets[cid] >= sizes[cid] for cid in g.cids)
+        # per-epoch permutations of the padded range
+        assert g.perms.shape == (c, epochs, m_pad)
+        for i in range(c):
+            for e in range(epochs):
+                assert np.array_equal(np.sort(g.perms[i, e]),
+                                      np.arange(m_pad))

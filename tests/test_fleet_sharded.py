@@ -26,25 +26,19 @@ def _parity_payload():
     import jax
     import numpy as np
 
-    from repro.data.partition import train_test_split_clients
-    from repro.data.synthetic import synthetic_dataset
+    from conftest import fleet_bundle
     from repro.fed.fleet.batched import (FleetConfig, FleetEngine,
                                          make_cohort_groups,
                                          nominal_budgets, run_fleet_round)
-    from repro.fed.fleet.scenarios import build_scenario
     from repro.fed.fleet.sharded import ShardedFleetEngine, client_mesh
     from repro.fed.simulator import straggler_deadline
 
-    from repro.models.small import LogisticRegression
-
     # 18 clients: group sizes won't divide the device count evenly, so
     # zero-weight padding lanes are exercised alongside real splits
-    clients = synthetic_dataset(0.5, 0.5, n_clients=18, mean_samples=60,
-                                std_samples=40, seed=3)
-    train, _ = train_test_split_clients(clients)
-    sizes = [len(d["y"]) for d in train]
-    specs, _ = build_scenario("device_classes", sizes, seed=3)
-    model = LogisticRegression()
+    # (deduped builder from conftest, device_classes capabilities)
+    b = fleet_bundle(workload="mlp", n_clients=18, seed=3,
+                     scenario="device_classes")
+    model, train, specs = b.model, b.train, b.specs
     cfg = FleetConfig(epochs=3, batch_size=16, lr=0.05, seed=0)
     deadline = straggler_deadline(specs, cfg.epochs, 40.0)
     budgets = nominal_budgets(specs, deadline, cfg.epochs)

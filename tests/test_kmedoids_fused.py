@@ -15,12 +15,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import fixed_size_clients
 from repro.core.kmedoids import (kmedoids_batched, kmedoids_numpy,
                                  pairwise_sq_dists)
 from repro.fed.fleet.batched import (FleetConfig, FleetEngine,
                                      make_cohort_groups, run_fleet_round)
 from repro.kernels import ops, ref
-from repro.models.small import LogisticRegression
 
 
 # ---------------------------------------------------------------------------
@@ -186,13 +186,9 @@ def test_pairwise_wrappers_own_self_diag(use_kernel):
 # ---------------------------------------------------------------------------
 
 def _tiny_fleet(n_clients=6, m=40, seed=0):
-    rng = np.random.default_rng(seed)
-    data = []
-    for _ in range(n_clients):
-        x = rng.normal(size=(m, 60)).astype(np.float32)
-        y = rng.integers(0, 10, size=m).astype(np.int32)
-        data.append({"x": x, "y": y})
-    return LogisticRegression(), data
+    # deduped into conftest: same-size mlp clients so one budget maps to
+    # exactly one cohort group
+    return fixed_size_clients("mlp", n_clients=n_clients, m=m, seed=seed)
 
 
 def test_fused_group_program_is_single_dispatch():
@@ -209,7 +205,7 @@ def test_fused_group_program_is_single_dispatch():
     assert len(groups) == 1 and groups[0].k == 4
     g = groups[0]
 
-    key = (g.k, tuple(sorted(g.data)))
+    key = (g.k, jax.tree.structure(g.data))
     program = engine._group_program(g.k, key[1])
     calls = []
 

@@ -1,0 +1,218 @@
+"""Cross-engine conformance matrix for model-diverse fleet workloads.
+
+The PR 5 contract: every registered ``FleetWorkload`` (flat-feature MLP,
+SmallCNN images, char-LM token sequences, xLSTM char-LM) computes the
+SAME arithmetic on every fleet engine.  The matrix is
+
+    workload x engine{loop, batched, sharded} x use_kernel{on, off}
+
+with the per-client ``loop`` execution as the reference: for each cell we
+assert parity of the aggregated round params, the selected coreset
+medoids (bit-identical), the per-client round stats, and the weighted
+test-set eval, all within float32 tolerance.  ``use_kernel=True`` runs
+the Pallas selection kernels in interpret mode on CPU — the same
+numerics CI gates on.
+
+Also here: the determinism goldens for the new workloads (two identical
+``run_fleet`` runs produce byte-identical round-stats/trace sequences —
+the fleet-path extension of the PR 1 event-log determinism pattern) and
+the schema validation behavior of ``FleetWorkload``.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.fed.fleet.batched import (FleetConfig, FleetEngine,
+                                     nominal_budgets, run_fleet,
+                                     run_fleet_round)
+from repro.fed.fleet.sharded import ShardedFleetEngine, client_mesh
+from repro.fed.fleet.workloads import get_workload
+from repro.fed.server import make_eval_fn
+from repro.fed.simulator import straggler_deadline
+
+WORKLOADS = ("mlp", "cnn", "charlm", "xlstm")
+ENGINES = ("batched", "sharded")        # each compared against "loop"
+KERNELS = (True, False)                 # on = interpret-mode Pallas on CPU
+
+# tiny-but-real fleets: small enough that the per-batch-dispatch loop
+# reference stays fast, big enough that every workload has coreset
+# (straggler) clients AND full-set clients in the cohort
+N_CLIENTS, MEAN_M, STD_M, SEED = 6, 24.0, 8.0, 0
+CFG = dict(epochs=2, batch_size=8, lr=0.05, seed=0)
+STRAGGLER_PCT = 40.0
+
+_rounds = {}
+
+
+def _round(bundles, workload, engine, use_kernel):
+    """One fleet round through ``engine``; cached per matrix cell so the
+    loop reference is computed once per (workload, kernel) column.
+    ``bundles`` is the session-cached conftest factory, so every cell of
+    a workload's column shares one dataset build."""
+    key = (workload, engine, use_kernel)
+    if key in _rounds:
+        return _rounds[key]
+    b = bundles(workload=workload, n_clients=N_CLIENTS, seed=SEED,
+                mean_samples=MEAN_M, std_samples=STD_M)
+    cfg = FleetConfig(use_kernel=use_kernel, **CFG)
+    deadline = straggler_deadline(b.specs, cfg.epochs, STRAGGLER_PCT)
+    budgets = nominal_budgets(b.specs, deadline, cfg.epochs)
+    params = b.workload.init(jax.random.PRNGKey(0))
+    cids = list(range(len(b.specs)))
+    eng = (ShardedFleetEngine(b.workload, cfg, mesh=client_mesh())
+           if engine == "sharded" else FleetEngine(b.workload, cfg))
+    p, stats = run_fleet_round(eng, params, b.train, cids, budgets,
+                               round_seed=0, mode=engine)
+    acc, loss = make_eval_fn(b.workload, b.test, 256)(p)
+    _rounds[key] = (p, stats, (float(acc), float(loss)))
+    return _rounds[key]
+
+
+@pytest.mark.parametrize("use_kernel", KERNELS,
+                         ids=["kernel_on", "kernel_off"])
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("workload", WORKLOADS)
+def test_engine_matches_loop_reference(fleet_bundles, workload, engine,
+                                       use_kernel):
+    ref_p, ref_s, ref_eval = _round(fleet_bundles, workload, "loop",
+                                    use_kernel)
+    p, s, ev = _round(fleet_bundles, workload, engine, use_kernel)
+
+    # the straggler (coreset) path AND the full-set path are both live
+    assert 0 < ref_s.used_coreset.sum() < ref_s.cids.size
+
+    # aggregated round params within float32 tolerance
+    for a, b in zip(jax.tree.leaves(ref_p), jax.tree.leaves(p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+    # bit-identical medoid selections per client
+    assert set(s.medoids) == set(ref_s.medoids)
+    for cid in s.medoids:
+        np.testing.assert_array_equal(s.medoids[cid], ref_s.medoids[cid])
+
+    # per-client round stats agree (same cohort order contract)
+    np.testing.assert_array_equal(s.cids, ref_s.cids)
+    np.testing.assert_array_equal(s.m, ref_s.m)
+    np.testing.assert_array_equal(s.budgets, ref_s.budgets)
+    np.testing.assert_array_equal(s.used_coreset, ref_s.used_coreset)
+    np.testing.assert_array_equal(s.work, ref_s.work)
+    np.testing.assert_allclose(s.losses, ref_s.losses, atol=1e-5)
+
+    # weighted test-set eval of the aggregated params
+    np.testing.assert_allclose(ev, ref_eval, atol=1e-5)
+
+
+@pytest.mark.parametrize("workload", WORKLOADS)
+def test_kernel_choice_does_not_change_medoids(fleet_bundles, workload):
+    """use_kernel on/off is an execution detail of the selection fast
+    path: medoid choices must be identical either way."""
+    _, s_on, _ = _round(fleet_bundles, workload, "batched", True)
+    _, s_off, _ = _round(fleet_bundles, workload, "batched", False)
+    assert set(s_on.medoids) == set(s_off.medoids)
+    for cid in s_on.medoids:
+        np.testing.assert_array_equal(s_on.medoids[cid], s_off.medoids[cid])
+
+
+# ---------------------------------------------------------------------------
+# determinism goldens for the new workloads
+# ---------------------------------------------------------------------------
+
+def _stats_bytes(stats):
+    """FleetRoundStats as a canonical byte string (golden comparison)."""
+    parts = [stats.cids.tobytes(), stats.m.tobytes(),
+             stats.budgets.tobytes(), stats.used_coreset.tobytes(),
+             stats.work.tobytes(), stats.losses.tobytes()]
+    for cid in sorted(stats.medoids):
+        parts.append(np.asarray(stats.medoids[cid]).tobytes())
+    return b"".join(parts)
+
+
+@pytest.mark.parametrize("workload", ("cnn", "charlm"))
+def test_run_fleet_determinism_golden(fleet_bundles, workload):
+    """Two identical runs per new workload: byte-identical round stats,
+    byte-identical params, and identical trace-perturbed histories —
+    the PR 1 event-log determinism pattern extended to the fleet path."""
+    b = fleet_bundles(workload=workload, n_clients=N_CLIENTS, seed=SEED,
+                      mean_samples=MEAN_M, std_samples=STD_M,
+                      scenario="flash_crowd")
+    cfg = FleetConfig(**CFG)
+    deadline = straggler_deadline(b.specs, cfg.epochs, STRAGGLER_PCT)
+    budgets = nominal_budgets(b.specs, deadline, cfg.epochs)
+    params = b.workload.init(jax.random.PRNGKey(0))
+    cids = list(range(len(b.specs)))
+
+    def one_round():
+        engine = FleetEngine(b.workload, cfg)
+        return run_fleet_round(engine, params, b.train, cids, budgets,
+                               round_seed=0, mode="batched")
+
+    (p1, s1), (p2, s2) = one_round(), one_round()
+    assert _stats_bytes(s1) == _stats_bytes(s2)
+    for a, c in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        assert np.asarray(a).tobytes() == np.asarray(c).tobytes()
+
+    def full_run():
+        return run_fleet(b.workload, b.train, b.specs, cfg, rounds=2,
+                         trace=b.trace, test_data=b.test)
+
+    ra, rb = full_run(), full_run()
+    assert [dataclasses.astuple(r) for r in ra["history"]] == \
+        [dataclasses.astuple(r) for r in rb["history"]]
+    for a, c in zip(jax.tree.leaves(ra["params"]),
+                    jax.tree.leaves(rb["params"])):
+        assert np.asarray(a).tobytes() == np.asarray(c).tobytes()
+    # the capability trace actually perturbed the recorded durations
+    plain = run_fleet(b.workload, b.train, b.specs, cfg, rounds=2,
+                      test_data=b.test)
+    assert ra["history"][0].client_times != plain["history"][0].client_times
+
+
+# ---------------------------------------------------------------------------
+# workload schema + registry behavior
+# ---------------------------------------------------------------------------
+
+def test_registry_names_and_schemas():
+    for name in ("mlp", "cnn", "charlm", "xlstm"):
+        wl = get_workload(name)
+        assert wl.name == name
+        assert set(wl.schema) == {"x", "y"}
+        clients = wl.make_clients(n_clients=2, seed=1)
+        wl.validate_clients(clients)      # no raise
+    with pytest.raises(ValueError, match="unknown fleet workload"):
+        get_workload("resnet152")
+
+
+def test_schema_validation_rejects_mismatches():
+    wl = get_workload("cnn")
+    good = wl.make_clients(n_clients=1, seed=0)
+    with pytest.raises(ValueError, match="fields"):
+        wl.validate_clients([{"x": np.asarray(good[0]["x"])}])
+    with pytest.raises(ValueError, match="shape"):
+        bad = dict(good[0], x=good[0]["x"][..., :7])
+        wl.validate_clients([bad])
+    with pytest.raises(ValueError, match="dtype"):
+        bad = dict(good[0], y=good[0]["y"].astype(np.int64))
+        wl.validate_clients([bad])
+    # a top-level "weights" field is engine-reserved and schema-exempt
+    wl.validate_clients([dict(
+        good[0], weights=np.ones(len(good[0]["y"]), np.float32))])
+
+
+@pytest.mark.parametrize("workload", ("cnn", "charlm"))
+def test_scenario_fleet_runtime_per_workload(workload):
+    """run_scenario's workload axis: registry-built clients through the
+    fleet runtime, deterministic, with the workload stamped on the
+    result."""
+    from repro.fed.fleet.scenarios import run_scenario
+
+    def go():
+        return run_scenario("device_classes", "fleet", workload=workload,
+                            n_clients=4, seed=0, rounds=2, epochs=2,
+                            batch_size=8)
+    out, again = go(), go()
+    assert out["workload"] == workload and out["runtime"] == "fleet"
+    assert len(out["history"]) == 2
+    assert [dataclasses.astuple(r) for r in out["history"]] == \
+        [dataclasses.astuple(r) for r in again["history"]]
