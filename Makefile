@@ -1,16 +1,30 @@
 PY ?= python
 
 .PHONY: test ci bench-async bench-fleet bench-fleet-smoke \
-	bench-fleet-sharded bench-selection bench-fleet-workloads
+	bench-fleet-sharded bench-selection bench-fleet-workloads \
+	report lint-noprint
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 # CI entry point: CPU-pinned tier-1 suite + the fleet + selection smokes
 ci:
+	$(MAKE) lint-noprint
 	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) -m pytest -x -q
 	$(MAKE) bench-fleet-smoke
 	$(MAKE) bench-selection
+
+# telemetry walkthrough: produce a small fleet JSONL run log
+# (runs/obs_demo.jsonl) and render the phase-timeline / straggler /
+# utilization report from it (benchmarks/report.py <log> reports on any
+# existing repro.obs JSONL log instead)
+report:
+	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/report.py --demo
+
+# keep-green gate: no new bare print() in src/repro — runtime output
+# goes through repro.obs sinks (see tools/lint_noprint.py's allowlist)
+lint-noprint:
+	$(PY) tools/lint_noprint.py
 
 bench-async:
 	PYTHONPATH=src $(PY) benchmarks/async_vs_sync.py --mode smoke

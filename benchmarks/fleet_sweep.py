@@ -223,6 +223,21 @@ def bench_engine(n_clients: int, epochs: int, batch_size: int,
     (_, _), cold_b = timed(True, "cold")
     warm = [timed(True, f"warm{i}") for i in range(reps)]
     (pb, sb), warm_b = warm[0][0], min(dt for _, dt in warm)
+
+    # telemetry overhead: the same warm batched round with the full
+    # observability stack live (spans + metrics + JSONL sink), vs the
+    # recording-off wall just measured; the <3% budget is what keeps the
+    # recorder always-on-able in production runs
+    import tempfile
+    from repro.obs import JSONLSink, Recorder, use_recorder
+    with tempfile.TemporaryDirectory() as tmp:
+        rec = Recorder(sinks=[JSONLSink(os.path.join(tmp, "bench.jsonl"))])
+        with use_recorder(rec):
+            warm_r = min(timed(True, f"rec-warm{i}")[1]
+                         for i in range(reps))
+        rec.close()
+    rec_overhead_pct = 100.0 * (warm_r - warm_b) / warm_b
+
     (_, _), cold_l = timed(False, "cold")
     warm = [timed(False, f"warm{i}") for i in range(reps)]
     (pl, sl), warm_l = warm[0][0], min(dt for _, dt in warm)
@@ -245,6 +260,8 @@ def bench_engine(n_clients: int, epochs: int, batch_size: int,
         "loop_wall_s": warm_l,
         "batched_cold_wall_s": cold_b,
         "loop_cold_wall_s": cold_l,
+        "recording_warm_wall_s": warm_r,
+        "recording_overhead_pct": rec_overhead_pct,
         "speedup": speedup,
         "clients_per_sec": n_clients / warm_b,
         "round_makespan_virtual_s": float(makespan),
@@ -463,6 +480,10 @@ def main(argv=None) -> int:
     ap.add_argument("--skip-selection", action="store_true",
                     help="skip the selection-phase breakdown benchmark")
     ap.add_argument("--min-speedup", type=float, default=5.0)
+    ap.add_argument("--max-recording-overhead", type=float, default=3.0,
+                    help="fail if the full observability stack (spans + "
+                         "metrics + JSONL sink) slows the warm batched "
+                         "round by more than this percentage")
     ap.add_argument("--min-selection-speedup", type=float, default=1.5,
                     help="fail if the fused selection path is not at least "
                          "this much faster than the pre-fusion dispatch "
@@ -517,7 +538,14 @@ def main(argv=None) -> int:
         fast = eng["speedup"] >= args.min_speedup
         print(f"  [{'PASS' if fast else 'FAIL'}] speedup "
               f"{eng['speedup']:.1f}x >= {args.min_speedup:.1f}x")
-        ok = ok and parity and fast
+        lean = (eng["recording_overhead_pct"]
+                <= args.max_recording_overhead)
+        print(f"  [{'PASS' if lean else 'FAIL'}] telemetry overhead "
+              f"{eng['recording_overhead_pct']:+.2f}% <= "
+              f"{args.max_recording_overhead:.1f}% "
+              f"(recording {eng['recording_warm_wall_s']:.3f}s vs "
+              f"off {eng['batched_wall_s']:.3f}s)")
+        ok = ok and parity and fast and lean
 
     if not args.skip_selection:
         print(f"\n== selection: coreset-selection phase at {n_clients} "

@@ -1,0 +1,372 @@
+"""Render a telemetry report from a JSONL run log (``make report``).
+
+The observability layer (``repro.obs``) writes one JSON record per line:
+``run`` metadata, ``span`` phase timings, canonical per-round ``event``
+records, per-round ``clients`` events (aligned cid/duration lists), and
+``metrics`` snapshots — one schema across the sync server, the async
+event engine, and every fleet engine (loop/batched/sharded).  This CLI
+turns such a log into the three tables an operator actually wants:
+
+  * **phase timeline** — per round, wall seconds spent in each phase
+    (direct children of that round's ``round`` span: cohort_select,
+    local_update/local_sgd, selection, coreset_group, aggregate, eval,
+    ...), plus a coverage column (phase sum / round wall) that proves
+    the spans account for the round;
+  * **top-k stragglers** — per-client totals from the ``clients``
+    events (simulated busy seconds, dispatches, deadline violations,
+    drops), sorted slowest-first;
+  * **summary** — run metadata, utilization/violation aggregates, and
+    the final metrics snapshot (dispatch + program-cache counters,
+    bytes aggregated, busy-time histogram).
+
+``--bench-out`` stamps the same structured summary into
+``BENCH_fleet.json`` under ``"observability"`` so the tracked perf
+report carries the phase breakdown.  ``--demo`` first produces a small
+fleet run log (JSONL sink) and then reports on it — the zero-setup
+walkthrough used by CI and the README.
+
+  PYTHONPATH=src python benchmarks/report.py runs/fleet.jsonl
+  PYTHONPATH=src python benchmarks/report.py --demo          # self-contained
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from collections import defaultdict
+from typing import Any, Dict, List, Optional
+
+from repro.obs import read_jsonl, validate_records
+
+
+# ---------------------------------------------------------------------------
+# log model: group the flat record stream per run / round / span tree
+# ---------------------------------------------------------------------------
+
+class RunLog:
+    """One runtime's slice of a JSONL log (records between ``run`` marks)."""
+
+    def __init__(self, meta: Dict[str, Any]):
+        self.meta = meta
+        self.spans: List[Dict[str, Any]] = []
+        self.rounds: List[Dict[str, Any]] = []    # canonical round events
+        self.clients: List[Dict[str, Any]] = []   # per-round clients events
+        self.events: List[Dict[str, Any]] = []    # everything else
+        self.metrics: Optional[Dict[str, Any]] = None   # last snapshot wins
+
+    @property
+    def label(self) -> str:
+        m = self.meta
+        return (f"{m.get('runtime', '?')}/{m.get('engine', '?')} "
+                f"n_clients={m.get('n_clients', '?')} "
+                f"seed={m.get('seed', '?')}")
+
+    def round_spans(self) -> List[Dict[str, Any]]:
+        return [s for s in self.spans if s["name"] == "round"]
+
+    def phase_rows(self) -> List[Dict[str, Any]]:
+        """Per round-span: {round, wall_s, coverage, phases: {name: s}}.
+
+        Phases are the *direct* children of the round span (depth +1,
+        parent == round sid); nested detail spans (e.g. grad_features
+        inside local_update) are charged to their top-level phase once,
+        not double-counted.
+        """
+        rows = []
+        by_parent: Dict[int, List[Dict[str, Any]]] = defaultdict(list)
+        for s in self.spans:
+            if s.get("parent") is not None:
+                by_parent[s["parent"]].append(s)
+        for rs in self.round_spans():
+            phases: Dict[str, float] = defaultdict(float)
+            for child in by_parent.get(rs["sid"], ()):
+                phases[child["name"]] += child["dur"]
+            wall = rs["dur"]
+            total = sum(phases.values())
+            rows.append({
+                "round": rs["attrs"].get("round"),
+                "wall_s": wall,
+                "phase_s": total,
+                "coverage": (total / wall) if wall > 0 else 1.0,
+                "phases": dict(phases),
+            })
+        return rows
+
+    def straggler_rows(self, top_k: int) -> List[Dict[str, Any]]:
+        """Per-client totals across every ``clients`` event, slowest
+        (highest simulated busy time) first."""
+        acc: Dict[int, Dict[str, Any]] = {}
+        for ev in self.clients:
+            d = ev["data"]
+            n = len(d["cids"])
+            dropped = d.get("dropped", [False] * n)
+            violated = d.get("violated", [False] * n)
+            for cid, dur, drop, viol in zip(d["cids"], d["durations"],
+                                            dropped, violated):
+                row = acc.setdefault(cid, {"cid": cid, "busy_s": 0.0,
+                                           "dispatches": 0, "violations": 0,
+                                           "drops": 0})
+                row["busy_s"] += float(dur)
+                row["dispatches"] += 1
+                row["violations"] += int(bool(viol))
+                row["drops"] += int(bool(drop))
+        order = sorted(acc.values(),
+                       key=lambda r: (-r["busy_s"], r["cid"]))
+        return order[:top_k]
+
+    def totals(self) -> Dict[str, Any]:
+        n_disp = n_viol = n_drop = 0
+        busy = 0.0
+        for ev in self.clients:
+            d = ev["data"]
+            n = len(d["cids"])
+            n_disp += n
+            busy += sum(float(x) for x in d["durations"])
+            n_viol += sum(map(bool, d.get("violated", [])))
+            n_drop += sum(map(bool, d.get("dropped", [])))
+        sim = sum(float(r["data"]["sim_round_time"]) for r in self.rounds)
+        wall = sum(float(r["data"]["wall_time_s"]) for r in self.rounds)
+        prows = self.phase_rows()
+        # a window with no phase children at all is the async runtime's
+        # trailing (empty) record window, not an uninstrumented round —
+        # it has no matching round event and contributes no coverage
+        cov = ([r["coverage"] for r in prows
+                if r["phases"] and r["wall_s"] > 0])
+        return {
+            "rounds": len(self.rounds),
+            "client_dispatches": n_disp,
+            "deadline_violations": n_viol,
+            "drops": n_drop,
+            "violation_rate": (n_viol / n_disp) if n_disp else 0.0,
+            "drop_rate": (n_drop / n_disp) if n_disp else 0.0,
+            "busy_virtual_s": busy,
+            "sim_time_s": sim,
+            "wall_time_s": wall,
+            # cohort-parallel utilization: mean client busy time over the
+            # round's critical path (1.0 = perfectly balanced cohort)
+            "utilization": (busy / n_disp / (sim / len(self.rounds))
+                            if n_disp and sim > 0 else 0.0),
+            "phase_coverage_mean": (sum(cov) / len(cov)) if cov else 0.0,
+        }
+
+
+def load_runs(records: List[Dict[str, Any]]) -> List[RunLog]:
+    """Split a record stream into per-run slices.
+
+    Records before the first ``run`` mark (e.g. the ``scenario`` event
+    ``run_scenario`` stamps) attach to the *next* run; a log with no
+    ``run`` record at all becomes one anonymous run.
+    """
+    runs: List[RunLog] = []
+    pending: List[Dict[str, Any]] = []
+
+    def sink(rec: Dict[str, Any], run: Optional[RunLog]) -> None:
+        if run is None:
+            pending.append(rec)
+            return
+        kind = rec["kind"]
+        if kind == "span":
+            run.spans.append(rec)
+        elif kind == "metrics":
+            run.metrics = rec["data"]
+        elif kind == "event" and rec["name"] == "round":
+            run.rounds.append(rec)
+        elif kind == "event" and rec["name"] == "clients":
+            run.clients.append(rec)
+        else:
+            run.events.append(rec)
+
+    current: Optional[RunLog] = None
+    for rec in records:
+        if rec["kind"] == "run":
+            current = RunLog(rec["data"])
+            runs.append(current)
+            for p in pending:
+                sink(p, current)
+            pending = []
+        else:
+            sink(rec, current)
+    if pending:     # headless log: no run record at all
+        current = RunLog({})
+        runs.append(current)
+        for p in pending:
+            sink(p, current)
+    return runs
+
+
+# ---------------------------------------------------------------------------
+# rendering
+# ---------------------------------------------------------------------------
+
+def _fmt_table(headers: List[str], rows: List[List[str]]) -> str:
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(headers)]
+    def line(cells):
+        return "  ".join(c.rjust(w) for c, w in zip(cells, widths))
+    out = [line(headers), line(["-" * w for w in widths])]
+    out += [line(r) for r in rows]
+    return "\n".join(out)
+
+
+def render_run(run: RunLog, top_k: int) -> str:
+    out = [f"== run: {run.label}"]
+    for k, v in sorted(run.meta.items()):
+        if k not in ("runtime", "engine", "n_clients", "seed"):
+            out.append(f"   {k}: {v}")
+
+    prows = run.phase_rows()
+    # column order: first appearance across the run
+    phase_names: List[str] = []
+    for r in prows:
+        for name in r["phases"]:
+            if name not in phase_names:
+                phase_names.append(name)
+    if prows:
+        headers = ["round"] + phase_names + ["other", "wall_s", "cover"]
+        body = []
+        for r in prows:
+            other = r["wall_s"] - r["phase_s"]
+            body.append(
+                [str(r["round"]) if r["round"] is not None else "-"]
+                + [f"{r['phases'].get(n, 0.0):.3f}" for n in phase_names]
+                + [f"{max(other, 0.0):.3f}", f"{r['wall_s']:.3f}",
+                   f"{r['coverage']:5.1%}"])
+        out += ["", "-- phase timeline (wall seconds per round) --",
+                _fmt_table(headers, body)]
+
+    srows = run.straggler_rows(top_k)
+    if srows:
+        headers = ["cid", "busy_virtual_s", "dispatches", "violations",
+                   "drops"]
+        body = [[str(r["cid"]), f"{r['busy_s']:.1f}", str(r["dispatches"]),
+                 str(r["violations"]), str(r["drops"])] for r in srows]
+        out += ["", f"-- top-{len(srows)} stragglers (simulated busy "
+                    f"time) --", _fmt_table(headers, body)]
+
+    t = run.totals()
+    out += ["", "-- summary --"]
+    out.append(f"   rounds {t['rounds']}  client dispatches "
+               f"{t['client_dispatches']}  violations "
+               f"{t['deadline_violations']} "
+               f"({t['violation_rate']:.1%})  drops {t['drops']} "
+               f"({t['drop_rate']:.1%})")
+    out.append(f"   virtual: busy {t['busy_virtual_s']:.1f}s over "
+               f"{t['sim_time_s']:.1f}s simulated  "
+               f"(utilization {t['utilization']:.1%})")
+    out.append(f"   wall: {t['wall_time_s']:.3f}s  phase coverage "
+               f"{t['phase_coverage_mean']:.1%}")
+    if run.metrics:
+        c = run.metrics.get("counters", {})
+        if c:
+            out.append("   counters: " + "  ".join(
+                f"{k}={v}" for k, v in sorted(c.items())))
+        h = run.metrics.get("histograms", {})
+        if "client_busy_s" in h:
+            s = h["client_busy_s"]
+            out.append(f"   client busy time: n={s['count']} "
+                       f"min={s['min']:.1f}s max={s['max']:.1f}s "
+                       f"mean={s['sum'] / max(s['count'], 1):.1f}s")
+    return "\n".join(out)
+
+
+def summarize(runs: List[RunLog], top_k: int) -> List[Dict[str, Any]]:
+    """The structured form stamped into BENCH_fleet.json."""
+    out = []
+    for run in runs:
+        prows = run.phase_rows()
+        phase_wall: Dict[str, float] = defaultdict(float)
+        for r in prows:
+            for name, s in r["phases"].items():
+                phase_wall[name] += s
+        out.append({
+            "meta": run.meta,
+            "totals": run.totals(),
+            "phase_wall_s": dict(sorted(phase_wall.items())),
+            "top_stragglers": run.straggler_rows(top_k),
+            "counters": (run.metrics or {}).get("counters", {}),
+        })
+    return out
+
+
+# ---------------------------------------------------------------------------
+# demo mode: produce a small fleet JSONL log, then report on it
+# ---------------------------------------------------------------------------
+
+def make_demo_log(path: str, *, rounds: int = 3, n_clients: int = 24,
+                  seed: int = 0) -> str:
+    from repro.data.partition import train_test_split_clients
+    from repro.fed.fleet.scenarios import run_scenario
+    from repro.fed.fleet.workloads import get_workload
+    from repro.obs import JSONLSink, Recorder, use_recorder
+
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    wl = get_workload("mlp")
+    clients = wl.make_clients(n_clients=n_clients, seed=seed)
+    train, test = train_test_split_clients(clients, test_frac=0.2)
+    rec = Recorder(sinks=[JSONLSink(path)])
+    with use_recorder(rec):
+        run_scenario("device_classes", "fleet", clients_data=train,
+                     test_data=test, workload=wl, seed=seed,
+                     rounds=rounds, epochs=2, batch_size=8)
+        rec.close()
+    return path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="render a telemetry report from a repro.obs JSONL log")
+    ap.add_argument("log", nargs="?", default=None,
+                    help="path to a JSONL run log (repro.obs.JSONLSink)")
+    ap.add_argument("--demo", action="store_true",
+                    help="first produce a small fleet run log "
+                         "(runs/obs_demo.jsonl unless a path is given), "
+                         "then report on it")
+    ap.add_argument("--top-k", type=int, default=5,
+                    help="stragglers to list per run (default 5)")
+    ap.add_argument("--bench-out", default=None, metavar="BENCH_JSON",
+                    help="merge the structured summary into this "
+                         "BENCH_fleet.json under 'observability'")
+    ap.add_argument("--no-validate", action="store_true",
+                    help="skip schema validation of the log")
+    args = ap.parse_args(argv)
+
+    path = args.log
+    if args.demo:
+        path = path or os.path.join("runs", "obs_demo.jsonl")
+        print(f"producing demo fleet log: {path}")
+        make_demo_log(path)
+    if path is None:
+        ap.error("either a log path or --demo is required")
+
+    records = read_jsonl(path)
+    if not records:
+        print(f"{path}: empty log")
+        return 1
+    if not args.no_validate:
+        validate_records(records)
+        print(f"{path}: {len(records)} records, schema OK")
+
+    runs = load_runs(records)
+    for run in runs:
+        print()
+        print(render_run(run, args.top_k))
+
+    if args.bench_out:
+        summary = summarize(runs, args.top_k)
+        merged: Dict[str, Any] = {}
+        if os.path.exists(args.bench_out):
+            try:
+                with open(args.bench_out) as f:
+                    merged = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                merged = {}
+        merged["observability"] = {"source": os.path.basename(path),
+                                   "runs": summary}
+        with open(args.bench_out, "w") as f:
+            json.dump(merged, f, indent=2, sort_keys=True)
+        print(f"\nstamped observability summary into {args.bench_out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -37,9 +37,11 @@ import numpy as np
 
 from repro.fed.aggregators import Aggregator, ClientUpdate, FedAsync
 from repro.fed.server import RoundRecord, make_eval_fn
-from repro.fed.simulator import (CapabilityTrace, ClientSpec, TraceConfig,
+from repro.fed.simulator import (CapabilityTrace, ClientSpec,
+                                 DispatchTraceIndexer, TraceConfig,
                                  straggler_deadline)
 from repro.fed.strategies import Strategy
+from repro.obs import active_recorder
 
 DISPATCH = "dispatch"
 COMPLETE = "complete"
@@ -136,7 +138,12 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
     sizes = np.array([s.m for s in specs], np.float64)
     busy = np.zeros(n, bool)
     busy_time = np.zeros(n)
-    dispatch_counts = np.zeros(n, np.int64)
+    tracei = DispatchTraceIndexer(n, trace)
+    obs = active_recorder(verbose)
+    obs.run_meta(runtime="async", engine="async", strategy=strategy.name,
+                 aggregator=aggregator.name, n_clients=n,
+                 max_updates=cfg.max_updates, concurrency=cfg.concurrency,
+                 deadline=float(deadline), seed=cfg.seed)
     # cid -> (ClientResult | None, dispatch version, dispatch-time params,
     #         realized work units)
     pending: Dict[int, Any] = {}
@@ -154,14 +161,20 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
     # per-record accumulators
     rec_times: List[float] = []
     rec_losses: List[float] = []
+    rec_rows: List[tuple] = []    # (cid, duration, dropped, violated)
     rec_coreset = 0
     rec_dropped = 0
     rec_violations = 0
     rec_start = 0.0
+    rec_wall0 = _time.perf_counter()
+    # the async "round" is a record-window, not a lexical block, so the
+    # round span is opened/closed manually at window boundaries
+    round_span = obs.span_begin("round", round=0)
 
     def flush_record(t: float, eval_now: bool) -> None:
-        nonlocal rec_times, rec_losses, rec_coreset, rec_dropped
-        nonlocal rec_violations, rec_applied, rec_start
+        nonlocal rec_times, rec_losses, rec_rows, rec_coreset, rec_dropped
+        nonlocal rec_violations, rec_applied, rec_start, rec_wall0
+        nonlocal round_span
         rec = RoundRecord(
             round=len(history), sim_round_time=t - rec_start,
             client_times=rec_times, n_participants=len(rec_times),
@@ -170,18 +183,33 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
                         else float("nan")),
             n_violations=rec_violations)
         if eval_fn and eval_now:
-            rec.test_acc, rec.test_loss = eval_fn(params)
+            with obs.span("eval", round=rec.round):
+                rec.test_acc, rec.test_loss = eval_fn(params)
         if scheduler is not None:
             scheduler.record_round(rec.train_loss)
         history.append(rec)
-        if verbose:
-            print(f"[{strategy.name}/{aggregator.name}] "
-                  f"update {applied:4d} t={t:9.1f}s "
-                  f"loss {rec.train_loss:.4f} acc {rec.test_acc:.4f} "
-                  f"(core {rec_coreset}, drop {rec_dropped})")
-        rec_times, rec_losses = [], []
+        obs.span_end(round_span)
+        obs.event("round", runtime="async", engine="async",
+                  label=f"{strategy.name}/{aggregator.name}",
+                  round=rec.round, n_participants=rec.n_participants,
+                  n_dropped=rec_dropped, n_coreset=rec_coreset,
+                  n_violations=rec_violations,
+                  sim_round_time=float(rec.sim_round_time),
+                  wall_time_s=_time.perf_counter() - rec_wall0,
+                  train_loss=float(rec.train_loss),
+                  test_acc=float(rec.test_acc),
+                  test_loss=float(rec.test_loss),
+                  applied=applied, t_virtual=float(t))
+        obs.event("clients", round=rec.round,
+                  cids=[int(c) for c, _, _, _ in rec_rows],
+                  durations=[d for _, d, _, _ in rec_rows],
+                  dropped=[dr for _, _, dr, _ in rec_rows],
+                  violated=[v for _, _, _, v in rec_rows])
+        rec_times, rec_losses, rec_rows = [], [], []
         rec_coreset = rec_dropped = rec_violations = rec_applied = 0
         rec_start = t
+        rec_wall0 = _time.perf_counter()
+        round_span = obs.span_begin("round", round=len(history))
 
     n_dispatched = 0    # push-time count — the dispatch_limit gate
 
@@ -218,20 +246,21 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
 
         if ev.kind == DISPATCH:
             spec = specs[ev.cid]
-            k = int(dispatch_counts[ev.cid])
-            dispatch_counts[ev.cid] += 1
+            k = tracei.begin(ev.cid)
             if trace is not None:
                 spec = dataclasses.replace(
-                    spec, c=trace.capability(spec, k))
-            res = strategy.local_update(params, clients_data[ev.cid], spec,
-                                        deadline, cfg.epochs, rng)
+                    spec, c=tracei.capability(spec, k))
+            with obs.span("local_update", cid=ev.cid):
+                res = strategy.local_update(params, clients_data[ev.cid],
+                                            spec, deadline, cfg.epochs, rng)
+            obs.metrics.counter("dispatches").inc()
             if res is None:     # dropped straggler: slot blocked until τ
                 duration = deadline
                 work = spec.c * deadline
             else:
                 duration = res.sim_time
                 if trace is not None:
-                    duration *= trace.jitter(spec, k)
+                    duration *= tracei.jitter(spec, k)
                 work = res.sim_time * spec.c
             # staleness anchors at *processing* time, when the params
             # snapshot is taken — ev.version (push time) can lag it when
@@ -244,24 +273,33 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
         res, v0, base_params, work = pending.pop(ev.cid)
         busy[ev.cid] = False
         busy_time[ev.cid] += ev.duration
+        obs.metrics.histogram("client_busy_s").observe(ev.duration)
         if scheduler is not None:
             scheduler.observe(ev.cid, work, ev.duration)
         if res is None:
             dropped_total += 1
             rec_dropped += 1
+            obs.metrics.counter("drops").inc()
+            rec_rows.append((ev.cid, float(ev.duration), True, False))
         else:
             violations_total += int(res.deadline_violated)
             rec_violations += int(res.deadline_violated)
+            if res.deadline_violated:
+                obs.metrics.counter("deadline_violations").inc()
             staleness = version - v0
             staleness_log.append(staleness)
+            obs.metrics.histogram("staleness", exact=True).observe(staleness)
             rec_times.append(ev.duration)
             rec_losses.append(res.final_loss)
             rec_coreset += int(res.used_coreset)
-            new_params = aggregator.apply(
-                params, ClientUpdate(params=res.params,
-                                     n_samples=res.n_samples,
-                                     staleness=staleness,
-                                     base_params=base_params))
+            rec_rows.append((ev.cid, float(ev.duration), False,
+                             bool(res.deadline_violated)))
+            with obs.span("aggregate", cid=ev.cid):
+                new_params = aggregator.apply(
+                    params, ClientUpdate(params=res.params,
+                                         n_samples=res.n_samples,
+                                         staleness=staleness,
+                                         base_params=base_params))
             if new_params is not None:
                 params = new_params
                 version += 1
@@ -279,6 +317,7 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
     # drops, or contributions still sitting in an aggregator buffer
     if rec_applied or rec_times or rec_dropped:
         flush_record(now, eval_now=True)
+    obs.span_end(round_span)    # the (possibly empty) trailing window
 
     makespan = now
     # credit clients still mid-training at termination for the busy time
@@ -286,7 +325,7 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
     for ev in unprocessed + [e for _, _, e in queue._heap]:
         if ev.kind == COMPLETE and ev.cid in pending:
             busy_time[ev.cid] += max(0.0, ev.duration - (ev.time - makespan))
-    active = dispatch_counts > 0
+    active = tracei.counts > 0
     hist = (np.bincount(staleness_log) if staleness_log
             else np.zeros(1, np.int64))
     telemetry = {
@@ -300,12 +339,20 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
         "mean_staleness": (float(np.mean(staleness_log))
                            if staleness_log else 0.0),
         "max_staleness": int(hist.size - 1),
-        "n_dispatches": int(dispatch_counts.sum()),
+        "n_dispatches": int(tracei.counts.sum()),
         "n_updates_applied": applied,
         "n_dropped": dropped_total,
         "n_violations": violations_total,
         "wall_time": _time.perf_counter() - wall0,
     }
+    if obs.enabled:
+        obs.event("telemetry", **{k: (v.tolist() if isinstance(v, np.ndarray)
+                                      else v) for k, v in telemetry.items()})
+        obs.metrics.gauge("client_utilization").set(
+            telemetry["client_utilization"])
+        obs.metrics.gauge("active_client_utilization").set(
+            telemetry["active_client_utilization"])
+        obs.metrics.gauge("makespan_virtual_s").set(telemetry["makespan"])
     return {
         "params": params,
         "history": history,

@@ -36,6 +36,8 @@ epochs on the coreset.
 from __future__ import annotations
 
 import dataclasses
+import time
+from contextlib import contextmanager
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -46,8 +48,10 @@ from repro.core.coreset import (build_coreset_batched, coreset_budget,
                                 needs_coreset)
 from repro.fed.fleet.workloads import client_num_samples
 from repro.fed.server import RoundRecord, make_eval_fn
-from repro.fed.simulator import (CapabilityTrace, ClientSpec, TraceConfig,
+from repro.fed.simulator import (CapabilityTrace, ClientSpec,
+                                 DispatchTraceIndexer, TraceConfig,
                                  straggler_deadline)
+from repro.obs import active_recorder, get_recorder
 
 Pytree = Any
 
@@ -209,9 +213,13 @@ class FleetEngine:
     ``LocalTrainer.run_epochs`` execution model.  Identical arithmetic,
     so results match; only the dispatch structure differs.
 
-    ``dispatch_count`` counts top-level jitted program invocations (one
-    per group on the fused path) — the benchmark's dispatches-per-group
-    breakdown and the single-dispatch regression test read it.
+    ``dispatch_count`` counts top-level jitted program invocations —
+    exactly one per group on the fused path, one per jitted step on the
+    loop path — through the single ``count_dispatch`` accounting point
+    shared with ``ShardedFleetEngine``, so batched and sharded runs of
+    the same cohort report identical counts (asserted in the workload
+    conformance matrix).  The benchmark's dispatches-per-group breakdown
+    and the single-dispatch regression test read it.
     """
 
     def __init__(self, model, cfg: FleetConfig):
@@ -270,6 +278,48 @@ class FleetEngine:
         self._core_step1 = jax.jit(core_step)
         self._feats1 = jax.jit(model.grad_features)
 
+    # -- dispatch accounting + program-cache observability ----------------
+
+    def count_dispatch(self, n: int = 1) -> None:
+        """THE dispatch accounting point: every top-level jitted program
+        invocation on any engine (batched, sharded, loop) goes through
+        here, so counts are comparable across execution modes."""
+        self.dispatch_count += n
+        get_recorder().metrics.counter("fleet.dispatches").inc(n)
+
+    def _cached_program(self, cache: Dict, key, build, kind: str):
+        """Program-cache lookup with hit/miss counters per cache kind."""
+        fn = cache.get(key)
+        if fn is None:
+            fn = build()
+            cache[key] = fn
+            get_recorder().metrics.counter(
+                f"program_cache.{kind}.miss").inc()
+        else:
+            get_recorder().metrics.counter(f"program_cache.{kind}.hit").inc()
+        return fn
+
+    @contextmanager
+    def _dispatch_span(self, name: str, program, **attrs):
+        """Span around one top-level program invocation, stamping whether
+        this call compiled (the jit cache grew) so first-call compile
+        time is split from steady-state dispatch time in reports."""
+        obs = get_recorder()
+        if not obs.enabled:
+            yield
+            return
+        size_fn = getattr(program, "_cache_size", None)
+        before = size_fn() if callable(size_fn) else -1
+        with obs.span(name, **attrs) as sp:
+            yield
+            if before >= 0:
+                grew = size_fn() > before
+                sp.attrs["compile"] = grew
+                if grew:
+                    obs.metrics.counter("program_cache.compiles").inc()
+                    if before > 0:
+                        obs.metrics.counter("program_cache.recompiles").inc()
+
     # -- fused group programs ---------------------------------------------
 
     def _make_group_body(self, k: int):
@@ -323,20 +373,16 @@ class FleetEngine:
         return (1, 2) if jax.default_backend() != "cpu" else ()
 
     def _group_program(self, k: int, data_treedef):
-        key = (k, data_treedef)
-        fn = self._group_programs.get(key)
-        if fn is None:
-            fn = jax.jit(self._make_group_body(k),
-                         donate_argnums=self._donate_argnums())
-            self._group_programs[key] = fn
-        return fn
+        def build():
+            return jax.jit(self._make_group_body(k),
+                           donate_argnums=self._donate_argnums())
+        return self._cached_program(self._group_programs, (k, data_treedef),
+                                    build, "group")
 
     def _selection_program(self, k: int, data_treedef):
         """Selection phase only (features → distances → k-medoids) as one
         jitted dispatch — the benchmark's fused measurement unit."""
-        key = (k, data_treedef)
-        fn = self._select_programs.get(key)
-        if fn is None:
+        def build():
             cfg = self.cfg
             vm_feats = jax.vmap(
                 lambda p, d: self.model.grad_features(p, d),
@@ -347,9 +393,9 @@ class FleetEngine:
                 return build_coreset_batched(
                     feats, valid, k, use_kernel=cfg.use_kernel,
                     max_sweeps=cfg.max_sweeps)
-            fn = jax.jit(select)
-            self._select_programs[key] = fn
-        return fn
+            return jax.jit(select)
+        return self._cached_program(self._select_programs, (k, data_treedef),
+                                    build, "select")
 
     def select_group_coresets(self, params: Pytree, group: CohortGroup,
                               fused: bool = True):
@@ -368,23 +414,30 @@ class FleetEngine:
         cfg = self.cfg
         data = jax.tree.map(jnp.asarray, group.data)
         valid = jnp.asarray(group.valid)
+        obs = get_recorder()
         if fused:
             program = self._selection_program(group.k,
                                               jax.tree.structure(data))
-            self.dispatch_count += 1
-            return program(params, data, valid), 1
+            self.count_dispatch()
+            with self._dispatch_span("selection", program, k=group.k,
+                                     n_clients=group.n_clients, fused=True):
+                coreset = program(params, data, valid)
+            return coreset, 1
         from repro.core.coreset import Coreset
         from repro.core.kmedoids import kmedoids_batched
         from repro.kernels.ops import pairwise_l2_batched
-        feats = self._feats(params, data)                  # dispatch 1
-        D = pairwise_l2_batched(feats, squared=False,      # dispatch 2
-                                use_kernel=False)
-        m = D.shape[-1]
-        D = D * (1.0 - jnp.eye(m, dtype=D.dtype))[None]    # eager epilogue
-        res = kmedoids_batched(D, valid, group.k,          # dispatch 3
-                               max_sweeps=cfg.max_sweeps,
-                               use_kernel=False, legacy_sweep=True)
-        self.dispatch_count += 3
+        with obs.span("grad_features", k=group.k):
+            feats = self._feats(params, data)              # dispatch 1
+        with obs.span("distances", k=group.k):
+            D = pairwise_l2_batched(feats, squared=False,  # dispatch 2
+                                    use_kernel=False)
+            m = D.shape[-1]
+            D = D * (1.0 - jnp.eye(m, dtype=D.dtype))[None]  # eager epilogue
+        with obs.span("selection", k=group.k, fused=False):
+            res = kmedoids_batched(D, valid, group.k,      # dispatch 3
+                                   max_sweeps=cfg.max_sweeps,
+                                   use_kernel=False, legacy_sweep=True)
+        self.count_dispatch(3)
         return Coreset(indices=res.medoids,
                        weights=res.weights.astype(jnp.float32),
                        objective=res.objective,
@@ -414,28 +467,43 @@ class FleetEngine:
         """Run clients ``sl`` of a group as ONE jitted dispatch; returns
         (params (C,...), losses, medoid indices or None)."""
         cfg = self.cfg
-        # host-side slice, then one device transfer per call: the batched
-        # path ships the whole group at once, the loop path one client at
-        # a time
-        data = jax.tree.map(lambda v: jnp.asarray(v[sl]), group.data)
-        c = int(jax.tree.leaves(data)[0].shape[0])
-        w = jnp.asarray(group.valid[sl].astype(np.float32))  # (C, M)
-        p0 = self._broadcast_params(params, c)
-        program = self._group_program(group.k, jax.tree.structure(data))
-        self.dispatch_count += 1
+        # asarray never changes the treedef, so the program cache can be
+        # consulted before staging — letting the dispatch span charge the
+        # host-side transfers to the phase they belong to
+        program = self._group_program(group.k,
+                                      jax.tree.structure(group.data))
+        self.count_dispatch()
+        name = "local_sgd" if group.k == 0 else "coreset_group"
 
         if group.k == 0:    # full-set: E epochs of minibatch SGD
-            idx = self._batch_indices(group, slice(None), sl)
-            p, losses, _ = program(params, p0, data, w, idx)
+            with self._dispatch_span(name, program, k=0,
+                                     n_clients=group.n_clients):
+                # host-side slice, then one device transfer per call: the
+                # batched path ships the whole group at once, the loop
+                # path one client at a time
+                data = jax.tree.map(lambda v: jnp.asarray(v[sl]),
+                                    group.data)
+                c = int(jax.tree.leaves(data)[0].shape[0])
+                w = jnp.asarray(group.valid[sl].astype(np.float32))
+                p0 = self._broadcast_params(params, c)
+                idx = self._batch_indices(group, slice(None), sl)
+                p, losses, _ = program(params, p0, data, w, idx)
             return p, losses, None
 
         # Alg. 1 straggler path: features at round-start params, fused
         # coreset selection, one full-set epoch, E−1 coreset epochs —
         # all inside the one program.
-        idx1 = self._batch_indices(group, slice(0, 1), sl)
-        valid = jnp.asarray(group.valid[sl])
-        steps = jnp.zeros((c, max(cfg.epochs - 1, 1)))
-        p, losses, meds = program(params, p0, data, w, valid, idx1, steps)
+        with self._dispatch_span(name, program, k=group.k,
+                                 n_clients=group.n_clients):
+            data = jax.tree.map(lambda v: jnp.asarray(v[sl]), group.data)
+            c = int(jax.tree.leaves(data)[0].shape[0])
+            w = jnp.asarray(group.valid[sl].astype(np.float32))  # (C, M)
+            p0 = self._broadcast_params(params, c)
+            idx1 = self._batch_indices(group, slice(0, 1), sl)
+            valid = jnp.asarray(group.valid[sl])
+            steps = jnp.zeros((c, max(cfg.epochs - 1, 1)))
+            p, losses, meds = program(params, p0, data, w, valid, idx1,
+                                      steps)
         return p, losses, meds
 
     def _run_client_loop(self, params: Pytree, group: CohortGroup, c: int
@@ -455,6 +523,7 @@ class FleetEngine:
             loss = 0.0
             for t in range(idx.shape[1]):
                 p, loss = self._sgd_step1(p, data, w, jnp.asarray(idx[e, t]))
+            self.count_dispatch(idx.shape[1])   # one jitted call per step
             return p, loss
 
         if group.k == 0:
@@ -464,6 +533,7 @@ class FleetEngine:
             return p, float(loss), None
 
         feats = self._feats1(params, data)
+        self.count_dispatch()
         coreset = build_coreset_batched(
             feats[None], jnp.asarray(group.valid[c:c + 1]), group.k,
             use_kernel=cfg.use_kernel, max_sweeps=cfg.max_sweeps)
@@ -475,6 +545,7 @@ class FleetEngine:
         loss = 0.0
         for _ in range(max(cfg.epochs - 1, 1)):
             p, loss = self._core_step1(p, cdata, cw)
+        self.count_dispatch(max(cfg.epochs - 1, 1))
         return p, float(loss), med
 
     def run_group(self, params: Pytree, group: CohortGroup,
@@ -487,12 +558,15 @@ class FleetEngine:
                     None if meds is None else np.asarray(meds))
         # the per-client Python loop the batched engine replaces
         ps, losses, meds = [], [], []
-        for c in range(group.n_clients):
-            p, loss, med = self._run_client_loop(params, group, c)
-            ps.append(p)
-            losses.append(loss)
-            if med is not None:
-                meds.append(med)
+        name = "local_sgd" if group.k == 0 else "coreset_group"
+        with get_recorder().span(name, k=group.k,
+                                 n_clients=group.n_clients, mode="loop"):
+            for c in range(group.n_clients):
+                p, loss, med = self._run_client_loop(params, group, c)
+                ps.append(p)
+                losses.append(loss)
+                if med is not None:
+                    meds.append(med)
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *ps)
         return (stacked, np.array(losses),
                 np.stack(meds) if meds else None)
@@ -546,13 +620,15 @@ def run_fleet_round(engine: FleetEngine, params: Pytree,
     grouping (it is a pure function of (clients_data, cids, budgets, cfg,
     round_seed))."""
     cfg = engine.cfg
+    obs = get_recorder()
     if mode is None:
         mode = "batched" if batched else "loop"
     if mode not in ("batched", "loop", "sharded"):
         raise ValueError(f"unknown fleet execution mode {mode!r}")
     if groups is None:
-        groups = make_cohort_groups(clients_data, cids, budgets, cfg,
-                                    round_seed)
+        with obs.span("cohort_build", n_clients=len(cids)):
+            groups = make_cohort_groups(clients_data, cids, budgets, cfg,
+                                        round_seed)
     partials = []
     all_cids, all_m, all_b, all_core, all_work, all_loss, all_meds = \
         [], [], [], [], [], [], []
@@ -578,16 +654,22 @@ def run_fleet_round(engine: FleetEngine, params: Pytree,
         all_work.append(work)
         all_loss.append(losses)     # device arrays stay lazy until after
         all_meds.append(meds)       # every group has been dispatched
-    if mode == "sharded":
-        new_params = engine.combine_group_sums(partials, fallback=params)
-    else:
-        new_params = _aggregate_groups(partials, fallback=params)
-    all_loss = [np.asarray(ls) for ls in all_loss]
-    for g, meds in zip(groups, all_meds):
-        if meds is not None:
-            meds = np.asarray(meds)
-            for cid, med in zip(g.cids, meds):
-                medoids[int(cid)] = med
+    with obs.span("aggregate", n_groups=len(groups)):
+        if obs.enabled:             # bytes entering the reduction
+            obs.metrics.counter("aggregate.bytes").inc(sum(
+                int(leaf.nbytes) for part, _ in partials
+                for leaf in jax.tree.leaves(part)))
+        if mode == "sharded":
+            new_params = engine.combine_group_sums(partials, fallback=params)
+        else:
+            new_params = _aggregate_groups(partials, fallback=params)
+    with obs.span("gather", n_groups=len(groups)):
+        all_loss = [np.asarray(ls) for ls in all_loss]
+        for g, meds in zip(groups, all_meds):
+            if meds is not None:
+                meds = np.asarray(meds)
+                for cid, med in zip(g.cids, meds):
+                    medoids[int(cid)] = med
     stats = FleetRoundStats(
         cids=_cat(all_cids, np.int64), m=_cat(all_m, np.int64),
         budgets=_cat(all_b, np.int64),
@@ -646,35 +728,41 @@ def run_fleet(model, clients_data: Sequence[Pytree],
         deadline = straggler_deadline(specs, cfg.epochs, straggler_pct)
     cap_trace = CapabilityTrace(trace) if trace is not None else None
     eval_fn = make_eval_fn(model, test_data, 512) if test_data else None
-    # per-client dispatch counters: the CapabilityTrace is defined per
+    # per-client dispatch cursors: the CapabilityTrace is defined per
     # (client, dispatch), exactly like repro.fed.server / repro.fed.events
-    dispatch_counts = np.zeros(len(specs), np.int64)
+    tracei = DispatchTraceIndexer(len(specs), cap_trace)
+    obs = active_recorder(verbose)
+    obs.run_meta(runtime="fleet", engine=mode, requested_engine=engine,
+                 n_clients=len(specs), rounds=rounds,
+                 deadline=float(deadline), seed=cfg.seed,
+                 n_devices=len(jax.devices()))
 
     history: List[RoundRecord] = []
     cohort_sizes: List[int] = []
     for r in range(rounds):
-        if scheduler is not None:
-            cohort = [int(c) for c in scheduler.select()]
-            budgets = {cid: scheduler.budget(cid, deadline, cfg.epochs)
-                       for cid in cohort}
-        else:
-            cohort = list(range(len(specs)))
-            budgets = nominal_budgets(specs, deadline, cfg.epochs)
+        t0 = time.perf_counter()
+        rspan = obs.span_begin("round", round=r)
+        with obs.span("cohort_select", round=r):
+            if scheduler is not None:
+                cohort = [int(c) for c in scheduler.select()]
+                budgets = {cid: scheduler.budget(cid, deadline, cfg.epochs)
+                           for cid in cohort}
+            else:
+                cohort = list(range(len(specs)))
+                budgets = nominal_budgets(specs, deadline, cfg.epochs)
         params, stats = run_fleet_round(eng, params, clients_data, cohort,
                                         budgets, round_seed=r, mode=mode)
         durations = []
-        for cid, work in zip(stats.cids, stats.work):
-            s = specs[cid]
-            k = int(dispatch_counts[cid])
-            dispatch_counts[cid] += 1
-            c_eff = (cap_trace.capability(s, k) if cap_trace is not None
-                     else s.c)
-            dur = work / c_eff
-            if cap_trace is not None:
-                dur *= cap_trace.jitter(s, k)
-            durations.append(dur)
-            if scheduler is not None:
-                scheduler.observe(int(cid), float(work), float(dur))
+        with obs.span("trace_account", round=r):
+            for cid, work in zip(stats.cids, stats.work):
+                s = specs[cid]
+                k = tracei.begin(cid)
+                dur = work / tracei.capability(s, k)
+                dur *= tracei.jitter(s, k)
+                durations.append(dur)
+                obs.metrics.histogram("client_busy_s").observe(dur)
+                if scheduler is not None:
+                    scheduler.observe(int(cid), float(work), float(dur))
         train_loss = (float(np.mean(stats.losses)) if stats.losses.size
                       else float("nan"))
         if scheduler is not None:
@@ -683,6 +771,7 @@ def run_fleet(model, clients_data: Sequence[Pytree],
         # a budget clamped to 1 or a slowdown episode can still overrun τ
         n_violations = int(sum(d > deadline * (1.0 + 1e-9)
                                for d in durations))
+        obs.metrics.counter("deadline_violations").inc(n_violations)
         rec = RoundRecord(
             round=r,
             sim_round_time=float(np.max(durations)) if durations else 0.0,
@@ -691,13 +780,25 @@ def run_fleet(model, clients_data: Sequence[Pytree],
             n_coreset=int(stats.used_coreset.sum()), train_loss=train_loss,
             n_violations=n_violations)
         if eval_fn and (r % eval_every == 0 or r == rounds - 1):
-            rec.test_acc, rec.test_loss = eval_fn(params)
+            with obs.span("eval", round=r):
+                rec.test_acc, rec.test_loss = eval_fn(params)
         history.append(rec)
         cohort_sizes.append(len(cohort))
-        if verbose:
-            print(f"[fleet/{mode}] round {r:3d} cohort {len(cohort):5d} "
-                  f"core {rec.n_coreset:5d} time {rec.sim_round_time:9.1f}s "
-                  f"loss {train_loss:.4f} acc {rec.test_acc:.4f}")
+        obs.span_end(rspan)
+        obs.event("round", runtime="fleet", engine=mode,
+                  label=f"fleet/{mode}", round=r,
+                  n_participants=len(cohort), n_dropped=0,
+                  n_coreset=rec.n_coreset, n_violations=n_violations,
+                  sim_round_time=float(rec.sim_round_time),
+                  wall_time_s=time.perf_counter() - t0,
+                  train_loss=float(train_loss),
+                  test_acc=float(rec.test_acc),
+                  test_loss=float(rec.test_loss))
+        obs.event("clients", round=r,
+                  cids=[int(c) for c in stats.cids],
+                  durations=[float(d) for d in durations],
+                  violated=[bool(d > deadline * (1.0 + 1e-9))
+                            for d in durations])
 
     return {
         "params": params,

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.fed.fleet.workloads import FleetWorkload, client_sizes, get_workload
 from repro.fed.simulator import ClientSpec, TraceConfig
+from repro.obs import get_recorder
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,6 +170,11 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
     sizes = client_sizes(clients_data)
     specs, trace = build_scenario(name, sizes, seed)
     core_cfg = FedCoreConfig(use_kernel=use_kernel)
+    # stamped before the runtime's own run record, so a JSONL log opens
+    # with the scenario context the report CLI keys on
+    get_recorder().event("scenario", scenario=name, runtime=runtime,
+                         workload=(wl.name if wl is not None else None),
+                         n_clients=len(specs), seed=seed)
 
     if runtime == "sync":
         cfg = FLConfig(rounds=rounds, clients_per_round=clients_per_round,

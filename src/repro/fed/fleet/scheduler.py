@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.coreset import coreset_budget, needs_coreset
 from repro.fed.simulator import ClientSpec
+from repro.obs import get_recorder
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,10 +117,20 @@ class AdaptiveParticipation:
         a = self.cfg.ewma
         self.observed[cid] = (1.0 - a) * self.observed[cid] + a * c_hat
         self._n_obs[cid] += 1
+        get_recorder().metrics.histogram(
+            "scheduler.observed_capability").observe(c_hat)
 
     def record_round(self, train_loss: float) -> None:
         """FLANP growth test: grow the cohort when loss stops improving."""
         self._round += 1
+        obs = get_recorder()
+        if obs.enabled:     # the EWMA state, visible as gauges per round
+            obs.metrics.gauge("scheduler.cohort_size").set(
+                self.cohort_size())
+            obs.metrics.gauge("scheduler.mean_observed_capability").set(
+                float(self.observed.mean()))
+            obs.metrics.gauge("scheduler.n_growths").set(
+                len(self.growth_log))
         if not np.isfinite(train_loss):
             return
         if train_loss < self._best_loss * (1.0 - self.cfg.plateau_tol):

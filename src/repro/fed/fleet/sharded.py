@@ -94,12 +94,8 @@ class ShardedFleetEngine(FleetEngine):
     # -- program construction --------------------------------------------
 
     def _program(self, k: int, data_treedef):
-        key = (k, data_treedef)
-        fn = self._programs.get(key)
-        if fn is None:
-            fn = self._build_program(k)
-            self._programs[key] = fn
-        return fn
+        return self._cached_program(self._programs, (k, data_treedef),
+                                    lambda: self._build_program(k), "group")
 
     def _build_program(self, k: int):
         """Build the shard_mapped program for groups with budget ``k``.
@@ -169,36 +165,44 @@ class ShardedFleetEngine(FleetEngine):
         cfg = self.cfg
         c = group.n_clients
         pad = (-c) % self.n_devices
-        lane_w = np.concatenate(
-            [np.asarray(weights, np.float32), np.zeros(pad, np.float32)])
-        data = jax.tree.map(
-            lambda v: self._shard_put(_pad_lanes(np.asarray(v), pad)),
-            group.data)
-        w = self._shard_put(
-            _pad_lanes(group.valid.astype(np.float32), pad))
-        lane_w = self._shard_put(lane_w)
-        m_pad = group.valid.shape[1]
-        t_full = cfg.epochs * (m_pad // cfg.batch_size)
-        idx_all = group.perms.reshape(c, t_full, cfg.batch_size)
-        program = self._program(group.k, jax.tree.structure(data))
-        self.dispatch_count += 1
+        # shard_put never changes the treedef, so the cache is consulted
+        # before staging and the dispatch span covers the host-side
+        # padding + device placement along with the program call
+        program = self._program(group.k, jax.tree.structure(group.data))
+        self.count_dispatch()       # same accounting point as batched:
+        # one top-level jitted invocation per group, so batched and
+        # sharded runs of a cohort report identical dispatch counts
+        name = "local_sgd" if group.k == 0 else "coreset_group"
 
         # outputs stay device-resident (lazy): materializing here would
         # block each group's program before the next one is dispatched,
         # serializing the mesh — the round driver converts after every
         # group has been enqueued
-        if group.k == 0:
-            idx = self._shard_put(_pad_lanes(idx_all, pad))
-            part, wsum, losses = program(params, data, w, lane_w, idx)
-            return part, wsum, losses[:c], None
-
-        idx1 = self._shard_put(
-            _pad_lanes(idx_all[:, : m_pad // cfg.batch_size], pad))
-        valid = self._shard_put(_pad_lanes(group.valid, pad))
-        steps = self._shard_put(
-            np.zeros((c + pad, max(cfg.epochs - 1, 1)), np.float32))
-        part, wsum, losses, meds = program(params, data, w, lane_w, idx1,
-                                           valid, steps)
+        with self._dispatch_span(name, program, k=group.k, n_clients=c,
+                                 sharded=True):
+            lane_w = np.concatenate(
+                [np.asarray(weights, np.float32),
+                 np.zeros(pad, np.float32)])
+            data = jax.tree.map(
+                lambda v: self._shard_put(_pad_lanes(np.asarray(v), pad)),
+                group.data)
+            w = self._shard_put(
+                _pad_lanes(group.valid.astype(np.float32), pad))
+            lane_w = self._shard_put(lane_w)
+            m_pad = group.valid.shape[1]
+            t_full = cfg.epochs * (m_pad // cfg.batch_size)
+            idx_all = group.perms.reshape(c, t_full, cfg.batch_size)
+            if group.k == 0:
+                idx = self._shard_put(_pad_lanes(idx_all, pad))
+                part, wsum, losses = program(params, data, w, lane_w, idx)
+                return part, wsum, losses[:c], None
+            idx1 = self._shard_put(
+                _pad_lanes(idx_all[:, : m_pad // cfg.batch_size], pad))
+            valid = self._shard_put(_pad_lanes(group.valid, pad))
+            steps = self._shard_put(
+                np.zeros((c + pad, max(cfg.epochs - 1, 1)), np.float32))
+            part, wsum, losses, meds = program(params, data, w, lane_w,
+                                               idx1, valid, steps)
         return part, wsum, losses[:c], meds[:c]
 
     def combine_group_sums(self, partials: List[Tuple[Pytree, jnp.ndarray]],

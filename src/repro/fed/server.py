@@ -17,9 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fed.aggregators import SyncWeightedMean
-from repro.fed.simulator import (CapabilityTrace, ClientSpec, TraceConfig,
+from repro.fed.simulator import (CapabilityTrace, ClientSpec,
+                                 DispatchTraceIndexer, TraceConfig,
                                  straggler_deadline)
 from repro.fed.strategies import ClientResult, Strategy
+from repro.obs import active_recorder
 
 
 @dataclasses.dataclass
@@ -92,42 +94,60 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
     eval_fn = make_eval_fn(model, test_data, eval_batch) if test_data else None
     aggregator = SyncWeightedMean(cfg.weight_by_samples)
     trace = CapabilityTrace(cfg.trace) if cfg.trace is not None else None
-    dispatch_counts = np.zeros(len(specs), np.int64)
+    tracei = DispatchTraceIndexer(len(specs), trace)
+    obs = active_recorder(verbose)
+    obs.run_meta(runtime="sync", engine="sync", strategy=strategy.name,
+                 n_clients=len(specs), rounds=cfg.rounds,
+                 deadline=float(deadline), seed=cfg.seed)
 
     for r in range(cfg.rounds):
         t0 = time.perf_counter()
-        if scheduler is not None:
-            selected = [int(c) for c in scheduler.select()]
-        else:
-            selected = sample_clients(specs, cfg.clients_per_round, rng)
+        rspan = obs.span_begin("round", round=r)
+        with obs.span("cohort_select", round=r):
+            if scheduler is not None:
+                selected = [int(c) for c in scheduler.select()]
+            else:
+                selected = sample_clients(specs, cfg.clients_per_round, rng)
         results: List[ClientResult] = []
         times: List[float] = []
         dropped = 0
-        for cid in selected:
-            spec = specs[cid]
-            k = int(dispatch_counts[cid])
-            dispatch_counts[cid] += 1
-            if trace is not None:
-                spec = dataclasses.replace(spec,
-                                           c=trace.capability(spec, k))
-            res = strategy.local_update(params, clients_data[cid], spec,
-                                        deadline, cfg.epochs, rng)
-            if res is None:
-                dropped += 1
-                if scheduler is not None:   # a drop still occupies τ
-                    scheduler.observe(cid, spec.c * deadline, deadline)
-            else:
-                duration = res.sim_time
+        client_rows = []    # (cid, sim duration, dropped, violated)
+        with obs.span("local_update", round=r):
+            for cid in selected:
+                spec = specs[cid]
+                k = tracei.begin(cid)
                 if trace is not None:
-                    duration *= trace.jitter(spec, k)
-                results.append(res)
-                times.append(duration)
-                if scheduler is not None:
-                    scheduler.observe(cid, res.sim_time * spec.c, duration)
+                    spec = dataclasses.replace(spec,
+                                               c=tracei.capability(spec, k))
+                res = strategy.local_update(params, clients_data[cid], spec,
+                                            deadline, cfg.epochs, rng)
+                obs.metrics.counter("dispatches").inc()
+                if res is None:
+                    dropped += 1
+                    obs.metrics.counter("drops").inc()
+                    client_rows.append((cid, float(deadline), True, False))
+                    if scheduler is not None:   # a drop still occupies τ
+                        scheduler.observe(cid, spec.c * deadline, deadline)
+                else:
+                    duration = res.sim_time
+                    if trace is not None:
+                        duration *= tracei.jitter(spec, k)
+                    results.append(res)
+                    times.append(duration)
+                    obs.metrics.histogram("client_busy_s").observe(duration)
+                    if res.deadline_violated:
+                        obs.metrics.counter("deadline_violations").inc()
+                    client_rows.append((cid, float(duration), False,
+                                        bool(res.deadline_violated)))
+                    if scheduler is not None:
+                        scheduler.observe(cid, res.sim_time * spec.c,
+                                          duration)
 
-        if results:
-            params = aggregator.aggregate([r_.params for r_ in results],
-                                          [r_.n_samples for r_ in results])
+        with obs.span("aggregate", round=r):
+            if results:
+                params = aggregator.aggregate(
+                    [r_.params for r_ in results],
+                    [r_.n_samples for r_ in results])
         # dropped stragglers in FedAvg-DS still busy until τ
         round_time = max(times + ([deadline] if dropped else [0.0]))
         train_loss = float(np.mean([r_.final_loss for r_ in results])
@@ -141,13 +161,24 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
             train_loss=train_loss, wall_time=time.perf_counter() - t0,
             n_violations=sum(r_.deadline_violated for r_ in results))
         if eval_fn and (r % cfg.eval_every == 0 or r == cfg.rounds - 1):
-            rec.test_acc, rec.test_loss = eval_fn(params)
+            with obs.span("eval", round=r):
+                rec.test_acc, rec.test_loss = eval_fn(params)
         history.append(rec)
-        if verbose:
-            print(f"[{strategy.name}] round {r:3d} "
-                  f"time {round_time:8.1f}s loss {train_loss:.4f} "
-                  f"acc {rec.test_acc:.4f} (core {rec.n_coreset}, "
-                  f"drop {dropped})")
+        obs.span_end(rspan)
+        obs.event("round", runtime="sync", engine="sync",
+                  label=strategy.name, round=r,
+                  n_participants=rec.n_participants, n_dropped=dropped,
+                  n_coreset=rec.n_coreset, n_violations=rec.n_violations,
+                  sim_round_time=float(round_time),
+                  wall_time_s=time.perf_counter() - t0,
+                  train_loss=float(train_loss),
+                  test_acc=float(rec.test_acc),
+                  test_loss=float(rec.test_loss))
+        obs.event("clients", round=r,
+                  cids=[int(c) for c, _, _, _ in client_rows],
+                  durations=[d for _, d, _, _ in client_rows],
+                  dropped=[dr for _, _, dr, _ in client_rows],
+                  violated=[v for _, _, _, v in client_rows])
 
     return {
         "params": params,

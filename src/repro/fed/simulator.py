@@ -114,3 +114,40 @@ class CapabilityTrace:
     def jitter(self, spec: ClientSpec, dispatch_index: int) -> float:
         """Unpredictable multiplicative noise on the realized duration."""
         return self._entry(spec.cid, dispatch_index)[1]
+
+
+class DispatchTraceIndexer:
+    """Per-client dispatch cursors into a (possibly absent) trace.
+
+    Every runtime that consumes a ``CapabilityTrace`` must index it by
+    the client's *own* dispatch ordinal — NOT the round number — or
+    clients that sit out rounds (adaptive cohorts, async scheduling)
+    would skip trace entries and the run would stop being a pure
+    function of ``(seed, cid, dispatch_index)``.  This helper owns those
+    cursors; it replaces three hand-rolled ``dispatch_counts`` copies in
+    ``fed/server.py``, ``fed/events.py``, and ``fed/fleet/batched.py``
+    (the regression test in tests/test_obs.py pins the semantics).
+
+    With ``trace=None`` the indexer still counts dispatches (telemetry
+    wants the counts either way) and the perturbations are identities.
+    """
+
+    def __init__(self, n_clients: int, trace: CapabilityTrace | None):
+        self.trace = trace
+        self.counts = np.zeros(n_clients, dtype=np.int64)
+
+    def begin(self, cid: int) -> int:
+        """Allocate and return this dispatch's per-client ordinal."""
+        k = int(self.counts[cid])
+        self.counts[cid] += 1
+        return k
+
+    def capability(self, spec: ClientSpec, dispatch_index: int) -> float:
+        if self.trace is None:
+            return spec.c
+        return self.trace.capability(spec, dispatch_index)
+
+    def jitter(self, spec: ClientSpec, dispatch_index: int) -> float:
+        if self.trace is None:
+            return 1.0
+        return self.trace.jitter(spec, dispatch_index)

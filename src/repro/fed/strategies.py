@@ -20,6 +20,7 @@ from repro.core.gradients import grad_features
 from repro.data.batching import epoch_batches
 from repro.fed.simulator import ClientSpec
 from repro.models.training import make_train_step
+from repro.obs import get_recorder
 from repro.optim.optimizers import sgd
 
 FORWARD_FRAC = 1.0 / 3.0  # forward-only pass cost relative to a train step
@@ -180,15 +181,18 @@ class FedCore(Strategy):
 
     def local_update(self, global_params, data, spec, deadline, epochs, rng):
         model = self.trainer.model
+        obs = get_recorder()
         if not needs_coreset(spec.m, spec.c, deadline, epochs):
-            params, _, loss = self.trainer.run_epochs(global_params, data,
-                                                      epochs, rng)
+            with obs.span("local_sgd", cid=spec.cid):
+                params, _, loss = self.trainer.run_epochs(global_params,
+                                                          data, epochs, rng)
             return ClientResult(params, spec.m, spec.full_round_time(epochs),
                                 epochs_done=epochs, final_loss=loss)
 
         cc = self.core_cfg
         can_full_first_epoch = spec.c * deadline > spec.m and epochs > 1
-        feats = grad_features(model, global_params, data)
+        with obs.span("grad_features", cid=spec.cid):
+            feats = grad_features(model, global_params, data)
         eff_epochs = epochs
         if can_full_first_epoch:
             budget = coreset_budget(spec.m, spec.c, deadline, epochs)
@@ -212,21 +216,26 @@ class FedCore(Strategy):
             if violated and cc.drop_infeasible:
                 return None
 
-        coreset = build_coreset(feats, budget, backend=cc.backend,
-                                use_kernel=cc.use_kernel,
-                                max_sweeps=cc.max_sweeps,
-                                projection_dim=cc.projection_dim)
-        cdata = coreset_batch(data, coreset, spec.m)
+        with obs.span("selection", cid=spec.cid, k=int(budget)):
+            coreset = build_coreset(feats, budget, backend=cc.backend,
+                                    use_kernel=cc.use_kernel,
+                                    max_sweeps=cc.max_sweeps,
+                                    projection_dim=cc.projection_dim)
+            cdata = coreset_batch(data, coreset, spec.m)
 
         params = global_params
         loss = 0.0
         if can_full_first_epoch:
-            params, _, loss = self.trainer.run_epochs(params, data, 1, rng)
-            params, _, loss = self.trainer.run_epochs(params, cdata,
-                                                      epochs - 1, rng)
+            with obs.span("local_sgd", cid=spec.cid):
+                params, _, loss = self.trainer.run_epochs(params, data, 1,
+                                                          rng)
+            with obs.span("coreset_epochs", cid=spec.cid):
+                params, _, loss = self.trainer.run_epochs(params, cdata,
+                                                          epochs - 1, rng)
         else:
-            params, _, loss = self.trainer.run_epochs(params, cdata,
-                                                      eff_epochs, rng)
+            with obs.span("coreset_epochs", cid=spec.cid):
+                params, _, loss = self.trainer.run_epochs(params, cdata,
+                                                          eff_epochs, rng)
         return ClientResult(params, spec.m, work / spec.c, used_coreset=True,
                             coreset_size=int(budget),
                             epochs_done=eff_epochs, final_loss=loss,

@@ -66,7 +66,8 @@ def _round(bundles, workload, engine, use_kernel):
     p, stats = run_fleet_round(eng, params, b.train, cids, budgets,
                                round_seed=0, mode=engine)
     acc, loss = make_eval_fn(b.workload, b.test, 256)(p)
-    _rounds[key] = (p, stats, (float(acc), float(loss)))
+    _rounds[key] = (p, stats, (float(acc), float(loss)),
+                    eng.dispatch_count)
     return _rounds[key]
 
 
@@ -76,9 +77,9 @@ def _round(bundles, workload, engine, use_kernel):
 @pytest.mark.parametrize("workload", WORKLOADS)
 def test_engine_matches_loop_reference(fleet_bundles, workload, engine,
                                        use_kernel):
-    ref_p, ref_s, ref_eval = _round(fleet_bundles, workload, "loop",
-                                    use_kernel)
-    p, s, ev = _round(fleet_bundles, workload, engine, use_kernel)
+    ref_p, ref_s, ref_eval, _ = _round(fleet_bundles, workload, "loop",
+                                       use_kernel)
+    p, s, ev, _ = _round(fleet_bundles, workload, engine, use_kernel)
 
     # the straggler (coreset) path AND the full-set path are both live
     assert 0 < ref_s.used_coreset.sum() < ref_s.cids.size
@@ -104,12 +105,30 @@ def test_engine_matches_loop_reference(fleet_bundles, workload, engine,
     np.testing.assert_allclose(ev, ref_eval, atol=1e-5)
 
 
+@pytest.mark.parametrize("use_kernel", KERNELS,
+                         ids=["kernel_on", "kernel_off"])
+@pytest.mark.parametrize("workload", WORKLOADS)
+def test_dispatch_accounting_consistent(fleet_bundles, workload,
+                                        use_kernel):
+    """batched and sharded count *top-level jitted invocations* from the
+    one ``count_dispatch`` accounting point, so an identical cohort must
+    report identical dispatch counts on both engines; the per-batch loop
+    reference dispatches once per jitted step and is strictly costlier."""
+    _, _, _, d_batched = _round(fleet_bundles, workload, "batched",
+                                use_kernel)
+    _, _, _, d_sharded = _round(fleet_bundles, workload, "sharded",
+                                use_kernel)
+    _, _, _, d_loop = _round(fleet_bundles, workload, "loop", use_kernel)
+    assert d_batched == d_sharded
+    assert d_loop > d_batched > 0
+
+
 @pytest.mark.parametrize("workload", WORKLOADS)
 def test_kernel_choice_does_not_change_medoids(fleet_bundles, workload):
     """use_kernel on/off is an execution detail of the selection fast
     path: medoid choices must be identical either way."""
-    _, s_on, _ = _round(fleet_bundles, workload, "batched", True)
-    _, s_off, _ = _round(fleet_bundles, workload, "batched", False)
+    _, s_on, _, _ = _round(fleet_bundles, workload, "batched", True)
+    _, s_off, _, _ = _round(fleet_bundles, workload, "batched", False)
     assert set(s_on.medoids) == set(s_off.medoids)
     for cid in s_on.medoids:
         np.testing.assert_array_equal(s_on.medoids[cid], s_off.medoids[cid])

@@ -1,0 +1,85 @@
+"""Forbid bare ``print(`` in ``src/repro/`` (``make lint-noprint``).
+
+Runtime output goes through the observability layer (``repro.obs``):
+structured events into sinks, with ``ConsoleSink`` as the one place
+that actually writes to a terminal.  A stray ``print`` in library code
+bypasses every sink (tests can't capture it, JSONL logs lose it), so
+this lint keeps the count pinned at the explicit allowlist below.
+
+Token-based (``tokenize``), not textual: comments, docstrings, and
+strings mentioning print are fine; only a ``print`` NAME token
+immediately followed by ``(`` counts.  A line may opt out with a
+``# noqa: lint-noprint`` comment (used by ConsoleSink itself).
+
+  python tools/lint_noprint.py            # lint src/repro
+  python tools/lint_noprint.py PATH...    # lint specific files/trees
+"""
+from __future__ import annotations
+
+import io
+import os
+import sys
+import tokenize
+from typing import Iterator, List, Tuple
+
+# files whose prints are sanctioned terminal UIs, not library output:
+# the launch CLIs talk to an operator, and ConsoleSink IS the console
+ALLOWLIST = (
+    os.path.join("src", "repro", "obs", "sinks.py"),
+    os.path.join("src", "repro", "launch", "dryrun.py"),
+    os.path.join("src", "repro", "launch", "serve.py"),
+    os.path.join("src", "repro", "launch", "train.py"),
+)
+NOQA = "noqa: lint-noprint"
+
+
+def iter_py_files(root: str) -> Iterator[str]:
+    if os.path.isfile(root):
+        yield root
+        return
+    for dirpath, _, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def find_prints(path: str) -> List[Tuple[int, str]]:
+    """(line number, line text) for every bare ``print(`` call site."""
+    with open(path, "rb") as f:
+        src = f.read()
+    lines = src.decode("utf-8").splitlines()
+    hits: List[Tuple[int, str]] = []
+    toks = list(tokenize.tokenize(io.BytesIO(src).readline))
+    for tok, nxt in zip(toks, toks[1:]):
+        if (tok.type == tokenize.NAME and tok.string == "print"
+                and nxt.type == tokenize.OP and nxt.string == "("):
+            line = lines[tok.start[0] - 1]
+            if NOQA not in line:
+                hits.append((tok.start[0], line.strip()))
+    return hits
+
+
+def main(argv: List[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    roots = argv or [os.path.join(repo, "src", "repro")]
+    allow = {os.path.join(repo, p) for p in ALLOWLIST}
+    bad = 0
+    for root in roots:
+        for path in iter_py_files(root):
+            if os.path.abspath(path) in allow:
+                continue
+            for lineno, line in find_prints(path):
+                rel = os.path.relpath(path, repo)
+                print(f"{rel}:{lineno}: bare print() — emit through "
+                      f"repro.obs instead: {line}")
+                bad += 1
+    if bad:
+        print(f"lint-noprint: {bad} violation(s)")
+        return 1
+    print("lint-noprint: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
