@@ -1,8 +1,8 @@
 PY ?= python
 
 .PHONY: test ci bench-async bench-fleet bench-fleet-smoke \
-	bench-fleet-sharded bench-selection bench-fleet-workloads \
-	report lint-noprint
+	bench-fleet-sharded bench-fleet-async bench-selection \
+	bench-fleet-workloads report lint-noprint
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -55,6 +55,17 @@ bench-selection:
 bench-fleet-workloads:
 	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
 		--smoke --skip-engine --skip-scenarios --skip-selection
+
+# event-driven async fleet engine: throughput at the reference fleet
+# size vs the sync batched round, plus the 100k-client lazy-data scale
+# completion point.  --min-async-ratio 0.3 is the keep-green floor (the
+# tracked BENCH_fleet.json records the real ratio, >= 0.5x locally);
+# the ratio gate reads the sync reference from the tracked file when the
+# engine section is skipped
+bench-fleet-async:
+	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
+		--smoke --skip-engine --skip-scenarios --skip-selection \
+		--skip-workloads --async-fleet --min-async-ratio 0.3
 
 # sharded-engine scaling sweep: one subprocess per device count (XLA
 # forced host-platform devices on CPU); gates on sharded==batched parity

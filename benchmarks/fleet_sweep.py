@@ -270,6 +270,158 @@ def bench_engine(n_clients: int, epochs: int, batch_size: int,
     }
 
 
+class _LazyFleetClients:
+    """Sequence view that synthesizes a client's dataset on first access.
+
+    The 100k-client scale point needs 100k ``ClientSpec`` rows but only
+    ever trains the few hundred clients the event loop actually
+    dispatches — so data is generated per-cid on ``__getitem__`` (mlp
+    schema: flat float32 features + int32 labels) and cached.  Sizes are
+    fixed up front so specs and data always agree."""
+
+    def __init__(self, sizes: List[int], n_features: int = 60,
+                 n_classes: int = 10, seed: int = 0):
+        self.sizes = list(sizes)
+        self.n_features = n_features
+        self.n_classes = n_classes
+        self.seed = seed
+        self._cache: Dict[int, Dict[str, np.ndarray]] = {}
+
+    def __len__(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def n_materialized(self) -> int:
+        return len(self._cache)
+
+    def __getitem__(self, cid: int) -> Dict[str, np.ndarray]:
+        got = self._cache.get(cid)
+        if got is None:
+            m = self.sizes[cid]
+            rng = np.random.default_rng(
+                np.random.SeedSequence((self.seed, int(cid))))
+            got = {
+                "x": rng.normal(
+                    size=(m, self.n_features)).astype(np.float32),
+                "y": rng.integers(
+                    0, self.n_classes, size=m).astype(np.int32),
+            }
+            self._cache[cid] = got
+        return got
+
+
+def bench_async_fleet(n_clients: int, epochs: int, batch_size: int,
+                      seed: int = 0, use_kernel=None, workload: str = "mlp",
+                      flushes: int = 4, reps: int = 2,
+                      verbose: bool = False) -> Dict:
+    """Throughput of the event-driven async fleet engine at the sync
+    engine's reference fleet size.
+
+    The same device-class fleet as ``bench_engine``, driven through
+    ``run_async_fleet`` with the whole fleet in flight and K sized so
+    ``flushes`` buffer flushes merge every client once — the async
+    analogue of one barrier round.  Reported clients/sec is merged
+    clients over the min warm wall (a caller-held engine keeps the group
+    program cache warm across reps, exactly like the sync benchmark's
+    reused engine)."""
+    from repro.fed.fleet.async_engine import (AsyncFleetConfig,
+                                              run_async_fleet)
+    wl = get_workload(workload)
+    clients = wl.make_clients(n_clients=n_clients, seed=seed,
+                              mean_samples=48.0, std_samples=32.0)
+    train, _ = train_test_split_clients(clients, test_frac=0.2)
+    specs, trace = build_scenario("device_classes", client_sizes(train),
+                                  seed)
+    buffer_k = max(1, len(specs) // flushes)
+    cfg = AsyncFleetConfig(max_updates=flushes, buffer_k=buffer_k,
+                           concurrency=len(specs), epochs=epochs,
+                           batch_size=batch_size, lr=0.05, seed=seed,
+                           use_kernel=use_kernel, trace=trace)
+    eng = FleetEngine(wl, cfg.fleet_config())
+
+    def timed(tag):
+        t0 = time.perf_counter()
+        out = run_async_fleet(wl, train, specs, cfg, engine="batched",
+                              engine_obj=eng)
+        jax.block_until_ready(out["params"])
+        dt = time.perf_counter() - t0
+        if verbose:
+            print(f"  [async_fleet] {tag:6s} {dt:8.3f}s")
+        return out, dt
+
+    out, cold = timed("cold")
+    warm_runs = [timed(f"warm{i}") for i in range(reps)]
+    out, warm = warm_runs[0][0], min(dt for _, dt in warm_runs)
+    tel = out["telemetry"]
+    return {
+        "workload": workload,
+        "n_clients": len(specs),
+        "epochs": epochs,
+        "batch_size": batch_size,
+        "flushes": int(out["applied"]),
+        "buffer_k": buffer_k,
+        "cold_wall_s": cold,
+        "warm_wall_s": warm,
+        "clients_per_sec": tel["n_merged_clients"] / warm,
+        "n_merged_clients": tel["n_merged_clients"],
+        "n_dispatches": tel["n_dispatches"],
+        "n_group_dispatches": tel["n_group_dispatches"],
+        "n_partial_flushes": tel["n_partial_flushes"],
+        "makespan_virtual_s": tel["makespan"],
+        "mean_staleness": tel["mean_staleness"],
+        "staleness_hist": np.asarray(tel["staleness_hist"]).tolist(),
+        "buffer_occupancy_hist":
+            np.asarray(tel["buffer_occupancy_hist"]).tolist(),
+        "mean_buffer_occupancy": tel["mean_buffer_occupancy"],
+    }
+
+
+def bench_async_fleet_scale(n_clients: int = 100_000, seed: int = 0,
+                            concurrency: int = 256, buffer_k: int = 64,
+                            flushes: int = 2, verbose: bool = False) -> Dict:
+    """The 100k-client completion point: a fleet of 100k specs through
+    the event-driven engine on CPU.  Feasible because (a) dispatch waves
+    and the event queue are O(in-flight), not O(fleet), (b) jitted
+    dispatches scale with cohort-group shapes per flush, not clients,
+    and (c) client data is materialized lazily — only dispatched cids
+    ever exist in memory."""
+    from repro.fed.fleet.async_engine import (AsyncFleetConfig,
+                                              run_async_fleet)
+    rng = np.random.default_rng(seed)
+    sizes = np.clip(rng.normal(48.0, 32.0, n_clients), 8, None).astype(int)
+    specs, trace = build_scenario("device_classes", sizes.tolist(), seed)
+    train = _LazyFleetClients(sizes.tolist(), seed=seed)
+    cfg = AsyncFleetConfig(max_updates=flushes, buffer_k=buffer_k,
+                           concurrency=concurrency, epochs=2, batch_size=8,
+                           lr=0.05, seed=seed, trace=trace)
+    t0 = time.perf_counter()
+    out = run_async_fleet(get_workload("mlp"), train, specs, cfg,
+                          engine="batched")
+    jax.block_until_ready(out["params"])
+    wall = time.perf_counter() - t0
+    tel = out["telemetry"]
+    row = {
+        "n_clients": n_clients,
+        "concurrency": concurrency,
+        "buffer_k": buffer_k,
+        "flushes": int(out["applied"]),
+        "wall_s": wall,
+        "n_dispatches": tel["n_dispatches"],
+        "n_group_dispatches": tel["n_group_dispatches"],
+        "n_merged_clients": tel["n_merged_clients"],
+        "n_clients_materialized": train.n_materialized,
+        "makespan_virtual_s": tel["makespan"],
+        "completed": bool(out["applied"] >= 1),
+    }
+    if verbose:
+        print(f"  scale point ({n_clients} clients): {wall:.1f}s wall, "
+              f"{row['n_dispatches']} client dispatches -> "
+              f"{row['n_group_dispatches']} group programs, "
+              f"{row['n_clients_materialized']} of {n_clients} clients "
+              f"materialized")
+    return row
+
+
 def _sharded_fleet(n_clients: int, epochs: int, batch_size: int, seed: int):
     """Shared workload builder for the device sweep (worker + parity)."""
     clients = synthetic_dataset(0.5, 0.5, n_clients=n_clients,
@@ -479,6 +631,18 @@ def main(argv=None) -> int:
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--skip-selection", action="store_true",
                     help="skip the selection-phase breakdown benchmark")
+    ap.add_argument("--async-fleet", action="store_true",
+                    help="benchmark the event-driven async fleet engine: "
+                         "throughput at the reference fleet size vs the "
+                         "sync batched round, plus the 100k-client lazy "
+                         "completion point")
+    ap.add_argument("--min-async-ratio", type=float, default=0.5,
+                    help="fail if async_fleet clients/sec falls below this "
+                         "fraction of the sync batched engine's (needs the "
+                         "engine section in this run or the tracked file)")
+    ap.add_argument("--async-scale-clients", type=int, default=100_000,
+                    help="fleet size for the async_fleet lazy scale point "
+                         "(0 disables it)")
     ap.add_argument("--min-speedup", type=float, default=5.0)
     ap.add_argument("--max-recording-overhead", type=float, default=3.0,
                     help="fail if the full observability stack (spans + "
@@ -574,6 +738,59 @@ def main(argv=None) -> int:
               f"{sel['selection_speedup']:.2f}x >= "
               f"{args.min_selection_speedup:.1f}x")
         ok = ok and sel_parity and sel_fast
+
+    if args.async_fleet:
+        print(f"\n== async_fleet: event-driven engine at {n_clients} "
+              f"clients (micro-batched flushes vs sync batched round)")
+        af = bench_async_fleet(n_clients, epochs, args.batch_size,
+                               seed=args.seed, use_kernel=use_kernel,
+                               workload=args.workload, verbose=True)
+        # reference sync throughput: this run's engine section, else the
+        # tracked file's (a --skip-engine keep-green run)
+        sync_cps = None
+        if "engine" in report:
+            sync_cps = report["engine"]["clients_per_sec"]
+        elif os.path.exists(args.out):
+            try:
+                with open(args.out) as f:
+                    sync_cps = json.load(f)["engine"]["clients_per_sec"]
+            except (OSError, json.JSONDecodeError, KeyError):
+                sync_cps = None
+        af["sync_clients_per_sec_ref"] = sync_cps
+        af["async_over_sync_ratio"] = (
+            af["clients_per_sec"] / sync_cps if sync_cps else None)
+        print(f"  merged {af['n_merged_clients']} clients in "
+              f"{af['flushes']} flushes (K={af['buffer_k']}): "
+              f"{af['clients_per_sec']:10.1f} clients/sec")
+        print(f"  {af['n_dispatches']} client completions -> "
+              f"{af['n_group_dispatches']} jitted group dispatches; "
+              f"mean staleness {af['mean_staleness']:.2f}, "
+              f"mean buffer occupancy {af['mean_buffer_occupancy']:.1f}")
+        report["async_fleet"] = af
+        if af["async_over_sync_ratio"] is not None:
+            near = af["async_over_sync_ratio"] >= args.min_async_ratio
+            print(f"  [{'PASS' if near else 'FAIL'}] async/sync throughput "
+                  f"{af['async_over_sync_ratio']:.2f}x >= "
+                  f"{args.min_async_ratio:.2f}x "
+                  f"(sync ref {sync_cps:.1f} clients/sec)")
+            ok = ok and near
+        else:
+            print("  [SKIP] no sync engine reference available for the "
+                  "throughput ratio gate")
+        if args.async_scale_clients > 0:
+            print(f"  scale: {args.async_scale_clients}-client fleet, "
+                  f"lazy data, dispatches ~ groups not clients")
+            scale = bench_async_fleet_scale(
+                args.async_scale_clients, seed=args.seed, verbose=True)
+            af["scale"] = scale
+            grouped = (scale["n_group_dispatches"]
+                       < scale["n_dispatches"])
+            done = scale["completed"]
+            print(f"  [{'PASS' if done and grouped else 'FAIL'}] "
+                  f"{scale['n_clients']}-client sim completed with "
+                  f"{scale['n_group_dispatches']} group programs for "
+                  f"{scale['n_dispatches']} client dispatches")
+            ok = ok and done and grouped
 
     if not args.skip_workloads:
         wl_rounds = 2 if args.smoke else 4

@@ -15,8 +15,15 @@ Shows the four fleet pieces working together:
   * ``run_fleet`` executes every round's whole cohort as a few vmapped
     XLA programs — no per-client Python loop.
 
+With ``--runtime async_fleet`` the same fleet runs through the
+event-driven engine instead: no barrier rounds — completions accumulate
+in a server-side buffer and every K of them are micro-batched into fused
+cohort-group programs, merged under a staleness-aware rule (FedBuff by
+default; ``--aggregator fedasync`` / ``delayed_grad`` switch the rule).
+
   PYTHONPATH=src python examples/fleet_demo.py                 # CNN fleet
   PYTHONPATH=src python examples/fleet_demo.py --workload charlm
+  PYTHONPATH=src python examples/fleet_demo.py --runtime async_fleet
   # mesh-sharded execution over N virtual CPU devices:
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
       PYTHONPATH=src python examples/fleet_demo.py --engine sharded
@@ -26,9 +33,10 @@ from __future__ import annotations
 import argparse
 
 from repro.data.partition import train_test_split_clients
-from repro.fed.fleet import (AdaptiveParticipation, FleetConfig,
-                             ParticipationConfig, build_scenario,
-                             client_sizes, get_workload, run_fleet)
+from repro.fed.fleet import (AdaptiveParticipation, AsyncFleetConfig,
+                             FleetConfig, ParticipationConfig,
+                             build_scenario, client_sizes, get_workload,
+                             run_async_fleet, run_fleet)
 
 # fleet sizes per workload, scaled so the demo stays interactive on CPU
 N_CLIENTS = {"mlp": 512, "cnn": 256, "charlm": 128, "xlstm": 128}
@@ -45,6 +53,14 @@ def main() -> None:
                     choices=tuple(sorted(N_CLIENTS)),
                     help="FleetWorkload to run (model + data schema + "
                          "dataset builder from the registry)")
+    ap.add_argument("--runtime", default="fleet",
+                    choices=("fleet", "async_fleet"),
+                    help="barrier-synchronous rounds (run_fleet) or the "
+                         "event-driven buffered engine (run_async_fleet)")
+    ap.add_argument("--aggregator", default="fedbuff",
+                    choices=("fedbuff", "fedasync", "delayed_grad"),
+                    help="async_fleet merge rule (ignored for --runtime "
+                         "fleet)")
     ap.add_argument("--rounds", type=int, default=8)
     args = ap.parse_args()
 
@@ -58,16 +74,32 @@ def main() -> None:
 
     scheduler = AdaptiveParticipation(specs, ParticipationConfig(
         min_cohort=16, growth_factor=2.0, plateau_tol=0.02))
-    cfg = FleetConfig(epochs=2, batch_size=32, lr=0.05, seed=0)
 
     print(f"workload: {workload.name} — {workload.description}")
-    out = run_fleet(workload, train, specs, cfg, rounds=args.rounds,
-                    scheduler=scheduler, trace=trace, test_data=test,
-                    engine=args.engine, verbose=True)
-
-    print(f"\nengine: {out['engine']} (ran {out['engine_mode']} on "
-          f"{out['n_devices']} device(s))")
-    print("cohort trajectory:", out["cohort_sizes"])
+    if args.runtime == "async_fleet":
+        cfg = AsyncFleetConfig(max_updates=args.rounds, buffer_k=16,
+                               concurrency=32, epochs=2, batch_size=32,
+                               lr=0.05, seed=0, trace=trace)
+        out = run_async_fleet(workload, train, specs, cfg,
+                              aggregator=args.aggregator,
+                              scheduler=scheduler, test_data=test,
+                              engine=args.engine, verbose=True)
+        tel = out["telemetry"]
+        print(f"\nengine: {out['engine']} (ran {out['engine_mode']} on "
+              f"{out['n_devices']} device(s)), merge rule "
+              f"{out['aggregator']}")
+        print(f"{tel['n_merged_clients']} client updates merged through "
+              f"{tel['n_group_dispatches']} jitted group programs in "
+              f"{out['applied']} flushes; mean staleness "
+              f"{tel['mean_staleness']:.2f}")
+    else:
+        cfg = FleetConfig(epochs=2, batch_size=32, lr=0.05, seed=0)
+        out = run_fleet(workload, train, specs, cfg, rounds=args.rounds,
+                        scheduler=scheduler, trace=trace, test_data=test,
+                        engine=args.engine, verbose=True)
+        print(f"\nengine: {out['engine']} (ran {out['engine_mode']} on "
+              f"{out['n_devices']} device(s))")
+        print("cohort trajectory:", out["cohort_sizes"])
     print("scheduler:", scheduler.summary())
     final = out["history"][-1]
     print(f"final test acc {final.test_acc:.4f} "

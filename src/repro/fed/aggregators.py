@@ -66,6 +66,16 @@ class Aggregator:
         """Drop buffered state; called by the engine at the start of a
         run so a reused aggregator cannot leak updates across runs."""
 
+    def flush(self, global_params: Pytree) -> Optional[Pytree]:
+        """Merge a partially-filled buffer at the end of a run.
+
+        Buffering aggregators override this so tail updates — client
+        work completed after the last full merge — are applied rather
+        than silently dropped at ``max_virtual_time`` / queue
+        exhaustion.  Returns new global params, or ``None`` when there
+        is nothing buffered (the default for unbuffered rules)."""
+        return None
+
 
 class SyncWeightedMean(Aggregator):
     """Weighted mean over a fixed cohort of ``round_size`` updates.
@@ -92,6 +102,13 @@ class SyncWeightedMean(Aggregator):
                              "as a streaming aggregator")
         self._buffer.append(update)
         if len(self._buffer) < self.round_size:
+            return None
+        buf, self._buffer = self._buffer, []
+        return self.aggregate([u.params for u in buf],
+                              [u.n_samples for u in buf])
+
+    def flush(self, global_params):
+        if not self._buffer:
             return None
         buf, self._buffer = self._buffer, []
         return self.aggregate([u.params for u in buf],
@@ -157,7 +174,9 @@ class FedBuff(Aggregator):
     would double-count size — same rationale as ``FLConfig``); when the
     buffer holds ``buffer_size`` updates the server applies
     w ← (1 − η) w + η · weighted_mean(buffer).  A partial buffer left at
-    the end of a run is discarded on the next run's ``reset()``.
+    the end of a run is merged by ``flush`` (the runtimes call it on
+    final drain and count it as a partial flush); a reused aggregator's
+    ``reset()`` still discards anything a caller never flushed.
     """
     name = "fedbuff"
 
@@ -173,11 +192,8 @@ class FedBuff(Aggregator):
         self.weight_by_samples = weight_by_samples
         self._buffer: List[ClientUpdate] = []
 
-    def apply(self, global_params, update):
-        self._buffer.append(update)
-        if len(self._buffer) < self.buffer_size:
-            return None
-        buf, self._buffer = self._buffer, []
+    def _merge(self, buf: List[ClientUpdate], global_params: Pytree
+               ) -> Pytree:
         weights = []
         for u in buf:
             w = float(u.n_samples) if self.weight_by_samples else 1.0
@@ -188,6 +204,19 @@ class FedBuff(Aggregator):
             return mean
         return tree_weighted_mean([global_params, mean],
                                   [1.0 - self.server_lr, self.server_lr])
+
+    def apply(self, global_params, update):
+        self._buffer.append(update)
+        if len(self._buffer) < self.buffer_size:
+            return None
+        buf, self._buffer = self._buffer, []
+        return self._merge(buf, global_params)
+
+    def flush(self, global_params):
+        if not self._buffer:
+            return None
+        buf, self._buffer = self._buffer, []
+        return self._merge(buf, global_params)
 
     def reset(self):
         self._buffer = []

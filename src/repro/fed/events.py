@@ -313,6 +313,18 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
         if applied < cfg.max_updates:
             dispatch(now)
 
+    # tail drain: a partially-filled aggregator buffer (FedBuff /
+    # semi-sync) holds real completed client work — merge it rather than
+    # silently dropping it at a cutoff or queue exhaustion
+    if applied < cfg.max_updates:
+        tail = aggregator.flush(params)
+        if tail is not None:
+            params = tail
+            version += 1
+            applied += 1
+            rec_applied += 1
+            obs.metrics.counter("aggregator.partial_flushes").inc()
+
     # partial record at a cutoff: applied-but-unrecorded updates, tail
     # drops, or contributions still sitting in an aggregator buffer
     if rec_applied or rec_times or rec_dropped:

@@ -1,3 +1,13 @@
+from repro.fed.fleet.async_engine import (  # noqa: F401
+    ASYNC_MERGES,
+    AsyncFleetConfig,
+    AsyncMergeRule,
+    DelayedGradientMerge,
+    FedAsyncMerge,
+    FedBuffMerge,
+    as_merge_rule,
+    run_async_fleet,
+)
 from repro.fed.fleet.batched import (  # noqa: F401
     CohortGroup,
     FleetConfig,
@@ -6,6 +16,7 @@ from repro.fed.fleet.batched import (  # noqa: F401
     make_cohort_groups,
     run_fleet,
     run_fleet_round,
+    weighted_param_sum,
 )
 from repro.fed.fleet.scenarios import (  # noqa: F401
     SCENARIOS,

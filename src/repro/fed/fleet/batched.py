@@ -572,6 +572,18 @@ class FleetEngine:
                 np.stack(meds) if meds else None)
 
 
+def weighted_param_sum(stacked: Pytree, weights) -> Pytree:
+    """Σ_c w_c · p_c over a (C, ...) parameter stack — the host-side
+    analogue of the sharded engine's ``weighted_psum_sum`` (one
+    tensordot per leaf, no per-client loop).  The sync round mean and
+    the async fleet engine's merge rules are both linear combinations of
+    client stacks, so this is the one reduction they share."""
+    ws = jnp.asarray(weights, jnp.float32)
+    return jax.tree.map(
+        lambda x: jnp.tensordot(ws, x.astype(jnp.float32), axes=(0, 0)),
+        stacked)
+
+
 def _aggregate_groups(partials: List[Tuple[Pytree, np.ndarray]],
                       fallback: Pytree) -> Pytree:
     """Weighted mean over all cohort clients: Σ_g Σ_c w·p / Σ w.
@@ -588,10 +600,7 @@ def _aggregate_groups(partials: List[Tuple[Pytree, np.ndarray]],
         return fallback
     acc = None
     for stacked, w in partials:
-        ws = jnp.asarray(w, jnp.float32)
-        part = jax.tree.map(
-            lambda x: jnp.tensordot(ws, x.astype(jnp.float32), axes=(0, 0)),
-            stacked)
+        part = weighted_param_sum(stacked, w)
         acc = part if acc is None else jax.tree.map(jnp.add, acc, part)
     return jax.tree.map(lambda x: x / total, acc)
 

@@ -128,13 +128,20 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
                  verbose: bool = False) -> Dict[str, Any]:
     """Drive one named scenario through one runtime.
 
-    ``runtime`` ∈ {"sync", "async", "fleet"}: the synchronous round server
-    (``run_federated`` with the FedCore strategy), the async event engine
-    (``run_federated_async``), or the batched fleet driver (``run_fleet``).
-    All three consume the same specs + capability trace from the registry,
-    so a scenario means the same fleet everywhere.  ``fleet_engine``
-    selects the fleet execution model ("batched" | "loop" | "sharded" —
-    the mesh-sharded engine, falling back to batched on one device).
+    ``runtime`` ∈ {"sync", "async", "fleet", "async_fleet"}: the
+    synchronous round server (``run_federated`` with the FedCore
+    strategy), the async event engine (``run_federated_async``), the
+    batched fleet driver (``run_fleet``), or the event-driven fleet
+    engine (``run_async_fleet`` — buffered completions micro-batched
+    into fused cohort-group programs).  All of them consume the same
+    specs + capability trace from the registry, so a scenario means the
+    same fleet everywhere.  ``fleet_engine`` selects the fleet execution
+    model ("batched" | "loop" | "sharded" — the mesh-sharded engine,
+    falling back to batched on one device) for both fleet runtimes.
+    For ``async_fleet``, ``max_updates`` counts buffer flushes
+    (defaulting to ``rounds``) and ``clients_per_round`` doubles as the
+    buffer size K, so a sync round and an async flush merge comparable
+    amounts of client work.
     ``use_kernel`` is the tri-state Pallas switch for the coreset
     selection fast path (None = auto by backend), threaded into whichever
     runtime's config does the selecting.
@@ -152,6 +159,8 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
     # fleet, keeping this the only direction of coupling
     from repro.core.coreset import FedCoreConfig
     from repro.fed.events import AsyncFLConfig, run_federated_async
+    from repro.fed.fleet.async_engine import (AsyncFleetConfig,
+                                              run_async_fleet)
     from repro.fed.fleet.batched import FleetConfig, run_fleet
     from repro.fed.server import FLConfig, run_federated
     from repro.fed.strategies import FedCore, LocalTrainer
@@ -202,6 +211,18 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
                         scheduler=scheduler, trace=trace,
                         straggler_pct=straggler_pct, test_data=test_data,
                         engine=fleet_engine, verbose=verbose)
+    elif runtime == "async_fleet":
+        cfg = AsyncFleetConfig(
+            max_updates=max_updates or rounds,
+            buffer_k=clients_per_round,
+            concurrency=max(concurrency, clients_per_round),
+            epochs=epochs, batch_size=batch_size, lr=lr,
+            straggler_pct=straggler_pct, seed=seed,
+            use_kernel=use_kernel, trace=trace)
+        out = run_async_fleet(model, clients_data, specs, cfg,
+                              aggregator=aggregator, scheduler=scheduler,
+                              test_data=test_data, engine=fleet_engine,
+                              verbose=verbose)
     else:
         raise ValueError(f"unknown runtime {runtime!r}")
     out["scenario"] = name

@@ -7,7 +7,7 @@ unique per run), ``t`` (seconds since the recorder's clock origin).
 Kinds:
 
 * ``run``    — ``data`` describes the run: at least ``runtime`` (one of
-  ``sync`` / ``async`` / ``fleet``) and ``engine``.
+  ``sync`` / ``async`` / ``fleet`` / ``async_fleet``) and ``engine``.
 * ``span``   — a closed phase span: ``name``, ``sid``, ``parent`` (sid
   or None), ``depth``, ``t0 <= t1``, ``dur``, free-form ``attrs``.
 * ``event``  — a named point event with a ``data`` dict.  Two names are
@@ -37,7 +37,7 @@ KINDS = ("run", "span", "event", "metrics")
 # canonical per-round schema — every runtime emits exactly these fields
 # (plus free extras) so cross-runtime comparison needs no translation
 ROUND_REQUIRED: Dict[str, tuple] = {
-    "runtime": (str,),            # "sync" | "async" | "fleet"
+    "runtime": (str,),            # "sync" | "async" | "fleet" | "async_fleet"
     "engine": (str,),             # sync|async|loop|batched|sharded
     "label": (str,),              # console tag, e.g. "fedcore", "fleet/batched"
     "round": (int,),
@@ -58,14 +58,14 @@ CLIENTS_REQUIRED: Dict[str, tuple] = {
     "durations": (list,),
 }
 
-RUNTIMES = ("sync", "async", "fleet")
+RUNTIMES = ("sync", "async", "fleet", "async_fleet")
 
 # the phase-span vocabulary runtimes draw from (report orders columns by
 # first appearance, so this is documentation + test reference, not a gate)
 PHASES = ("cohort_build", "cohort_select", "local_update", "local_sgd",
           "grad_features", "distances", "selection", "coreset_group",
           "coreset_epochs", "dispatch", "gather", "aggregate",
-          "trace_account", "eval")
+          "trace_account", "eval", "buffer_fill", "dispatch_wave")
 
 
 def _fail(msg: str, record: dict) -> None:

@@ -87,7 +87,15 @@ def _fmt_fleet(d: dict) -> str:
             f"loss {d['train_loss']:.4f} acc {d['test_acc']:.4f}")
 
 
-ROUND_FORMATS = {"sync": _fmt_sync, "async": _fmt_async, "fleet": _fmt_fleet}
+def _fmt_async_fleet(d: dict) -> str:
+    return (f"[{d['label']}] flush {d['round']:4d} "
+            f"t={d['t_virtual']:9.1f}s merged {d['n_participants']:4d} "
+            f"core {d['n_coreset']:4d} loss {d['train_loss']:.4f} "
+            f"acc {d['test_acc']:.4f}")
+
+
+ROUND_FORMATS = {"sync": _fmt_sync, "async": _fmt_async, "fleet": _fmt_fleet,
+                 "async_fleet": _fmt_async_fleet}
 
 
 class ConsoleSink(Sink):

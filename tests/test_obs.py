@@ -3,7 +3,8 @@
 Four contracts under test:
 
 1. **Schema** — every runtime (sync server, async event engine, fleet
-   loop/batched) emits one validating record stream: canonical ``round``
+   loop/batched, async fleet) emits one validating record stream:
+   canonical ``round``
    events with the same required fields, aligned ``clients`` events,
    well-nested spans (unique sids, child intervals inside parents).
 2. **Coverage** — the phase spans (direct children of each ``round``
@@ -37,7 +38,7 @@ from repro.obs import (NULL_RECORDER, ConsoleSink, InMemorySink, JSONLSink,
                        use_recorder, validate_records)
 from repro.obs.sinks import ROUND_FORMATS
 
-RUNTIMES = ("sync", "async", "fleet")
+RUNTIMES = ("sync", "async", "fleet", "async_fleet")
 
 
 def _report_mod():
@@ -144,8 +145,12 @@ def test_schema_validates_per_runtime(recorded_runs, runtime):
     assert len(runs) == 1 and runs[0]["data"]["runtime"] == runtime
     snaps = [r for r in records if r["kind"] == "metrics"]
     assert len(snaps) == 1              # rec.close() flushed exactly once
-    assert snaps[-1]["data"]["counters"]["dispatches" if runtime != "fleet"
-                                         else "fleet.dispatches"] > 0
+    counters = snaps[-1]["data"]["counters"]
+    assert counters["dispatches" if runtime != "fleet"
+                    else "fleet.dispatches"] > 0
+    if runtime == "async_fleet":
+        # client dispatches AND the (fewer) jitted group-program dispatches
+        assert 0 < counters["fleet.dispatches"] <= counters["dispatches"]
 
 
 @pytest.mark.parametrize("runtime", RUNTIMES)
@@ -210,6 +215,7 @@ def test_report_cli_renders_and_stamps(small_fleet, tmp_path):
 @pytest.mark.parametrize("runtime,engine", [
     ("sync", None), ("async", None),
     ("fleet", "batched"), ("fleet", "loop"), ("fleet", "sharded"),
+    ("async_fleet", "batched"), ("async_fleet", "loop"),
 ])
 def test_recording_preserves_determinism(small_fleet, runtime, engine):
     """Byte-identical params + identical histories with the recorder on
@@ -239,7 +245,7 @@ def test_recording_preserves_determinism(small_fleet, runtime, engine):
     for a, b in zip(jax.tree.leaves(on["params"]),
                     jax.tree.leaves(off["params"])):
         assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
-    if runtime == "async":
+    if runtime in ("async", "async_fleet"):
         assert on["event_log"] == off["event_log"]
 
 
