@@ -2,7 +2,7 @@ PY ?= python
 
 .PHONY: test ci bench-async bench-fleet bench-fleet-smoke \
 	bench-fleet-sharded bench-fleet-async bench-selection \
-	bench-fleet-workloads report lint-noprint
+	bench-fleet-workloads bench-fleet-translm bench-cost report lint-noprint
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -50,11 +50,36 @@ bench-selection:
 		--smoke --skip-engine --skip-scenarios --skip-workloads \
 		--min-selection-speedup 1.0
 
-# per-workload fleet rounds (mlp/cnn/charlm/xlstm through the batched
-# fleet runtime + loop round-0 parity); recorded in BENCH_fleet.json
+# per-workload fleet rounds (mlp/cnn/charlm/xlstm/translm through the
+# batched fleet runtime + loop round-0 parity); recorded in
+# BENCH_fleet.json
 bench-fleet-workloads:
 	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
 		--smoke --skip-engine --skip-scenarios --skip-selection
+
+# translm through the *engine* benchmark: batched-vs-loop parity and the
+# keep-green no-regression speedup floor on the transformer-LM workload
+# (the conformance matrix covers its per-engine cells; this gates the
+# full timed round at fleet scale).  96 clients keeps CI wall time
+# small; a separate --out keeps the tracked BENCH_fleet.json's headline
+# (mlp) engine section intact.
+bench-fleet-translm:
+	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
+		--smoke --skip-scenarios --skip-selection --skip-workloads \
+		--workload translm --clients 96 --min-speedup 1.0 \
+		--max-recording-overhead 25 \
+		--out benchmarks/BENCH_fleet_translm.json
+
+# cost-conditioned budget gate: measure every workload's per-sample step
+# cost (HLO FLOPs of the jitted local-SGD step, normalized to mlp) and
+# run the translm deadline A/B under device_classes — cost-conditioned
+# budgets vs the κ-ignorant legacy sample-count planner on identical
+# measured durations; keep-green gate is violation-rate(cost) <=
+# violation-rate(legacy), recorded in BENCH_fleet.json["cost_model"]
+bench-cost:
+	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
+		--smoke --skip-engine --skip-scenarios --skip-selection \
+		--skip-workloads --cost-model
 
 # event-driven async fleet engine: throughput at the reference fleet
 # size vs the sync batched round, plus the 100k-client lazy-data scale

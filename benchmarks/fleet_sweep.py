@@ -26,13 +26,21 @@ Two measurements in one harness:
    either path show up as a changed loss/makespan row.
 
 3b. **Workload matrix** — every registered ``FleetWorkload`` (mlp, cnn,
-   charlm, xlstm) driven through the batched fleet runtime at smoke
+   charlm, xlstm, translm) driven through the batched fleet runtime at smoke
    scale with a per-round history recorded under
    ``BENCH_fleet.json["workloads"]``, plus a batched-vs-loop round-0
    parity gate per workload (the rigorous cross-engine matrix lives in
    ``tests/test_workload_conformance.py``).  ``--workload`` additionally
    selects which workload the engine/selection benchmarks (1) and (2)
    run on — the tracked selection gate stays on the default ``mlp``.
+
+3c. **Cost model** (``--cost-model``) — per-workload measured step costs
+   (HLO FLOPs per sample, normalized to mlp) under
+   ``BENCH_fleet.json["cost_model"]``, plus the deadline A/B on the most
+   expensive workload: cost-conditioned budgets vs the κ-ignorant legacy
+   sample-count planner on the same device_classes fleet with the same
+   measured durations; gates on violation-rate(cost) ≤
+   violation-rate(legacy).  The ``make bench-cost`` keep-green target.
 
 4. **Sharded device sweep** (``--device-sweep 1,2,4``) — the mesh-sharded
    engine (``repro.fed.fleet.sharded``) timed at increasing device
@@ -569,6 +577,119 @@ def sweep_workloads(names, rounds: int, epochs: int, n_clients: int = 24,
     return table
 
 
+class _LegacySamplePlanner:
+    """κ-ignorant baseline planner: §4.2 budgets that treat the deadline
+    as a *sample count* (the pre-cost-model arithmetic), with full
+    participation and no adaptation.  Implemented as a scheduler-protocol
+    stub so ``run_fleet`` still prices realized durations through the
+    true measured cost model while the *budgets* ignore it — the
+    controlled A/B the cost-model gate runs."""
+
+    def __init__(self, specs):
+        self.specs = specs
+
+    def select(self):
+        return np.arange(len(self.specs))
+
+    def budget(self, cid: int, deadline: float, epochs: int) -> int:
+        from repro.fed.cost import UNIT_COST
+        s = self.specs[cid]
+        if not UNIT_COST.needs_coreset(s.m, s.c, deadline, epochs):
+            return s.m
+        return UNIT_COST.budget(s.m, s.c, deadline, epochs)
+
+    def observe(self, cid, work_units, duration):
+        pass
+
+    def record_round(self, train_loss):
+        pass
+
+
+def _violation_rate(out) -> float:
+    n_v = sum(r.n_violations for r in out["history"])
+    n_p = sum(r.n_participants for r in out["history"])
+    return n_v / max(n_p, 1)
+
+
+def bench_cost_model(gate_workload: str = "translm", n_clients: int = 24,
+                     rounds: int = 3, epochs: int = 2, batch_size: int = 8,
+                     seed: int = 0, verbose: bool = False) -> Dict:
+    """Cost-conditioned budgets: the measured table + the deadline A/B.
+
+    Part 1 measures every registered workload's per-sample step cost
+    (HLO FLOPs of the jitted local-SGD step, wall-clock fallback),
+    normalized to the mlp reference — the table budget conditioning
+    consumes.
+
+    Part 2 is the divergence experiment on ``gate_workload`` under the
+    ``device_classes`` mixture: the same fleet, trace, and *measured*
+    per-sample durations twice — once with cost-conditioned budgets
+    (``FleetConfig.cost``), once with the κ-ignorant legacy sample-count
+    planner.  On an expensive workload the legacy planner reads the
+    cost-calibrated deadline as ~κ× more samples than truly fit and
+    overcommits; the recorded deadline-violation rates are the gate
+    (cost ≤ legacy)."""
+    from repro.fed.cost import workload_cost_model
+    from repro.fed.fleet.batched import run_fleet
+
+    flops_table = {}
+    for name in sorted(WORKLOADS):
+        cm = workload_cost_model(name)
+        flops_table[name] = {
+            "cost_per_sample_rel": cm.cost_per_sample,
+            "flops_per_sample": cm.flops_per_sample,
+            "source": cm.source,
+        }
+        if verbose:
+            print(f"  {name:8s} source={cm.source:9s} "
+                  f"rel={cm.cost_per_sample:9.2f} "
+                  f"flops/sample={cm.flops_per_sample}")
+
+    wl = get_workload(gate_workload)
+    clients = wl.make_clients(n_clients=n_clients, seed=seed)
+    train, _ = train_test_split_clients(clients, test_frac=0.2)
+    specs, trace = build_scenario("device_classes", client_sizes(train),
+                                  seed)
+    cm = workload_cost_model(gate_workload)
+    cfg = FleetConfig(epochs=epochs, batch_size=batch_size, lr=0.05,
+                      seed=seed, cost=cm)
+
+    def run(scheduler):
+        t0 = time.perf_counter()
+        out = run_fleet(wl, train, specs, cfg, rounds=rounds, trace=trace,
+                        straggler_pct=30.0, scheduler=scheduler)
+        return out, time.perf_counter() - t0
+
+    out_cost, wall_c = run(None)
+    out_legacy, wall_l = run(_LegacySamplePlanner(specs))
+    rate_cost = _violation_rate(out_cost)
+    rate_legacy = _violation_rate(out_legacy)
+    if verbose:
+        print(f"  {gate_workload} x device_classes "
+              f"(κ={cm.cost_per_sample:.1f}): violation rate "
+              f"cost={rate_cost:.3f} vs legacy={rate_legacy:.3f}")
+    return {
+        "reference": "mlp",
+        "per_workload": flops_table,
+        "gate": {
+            "workload": gate_workload,
+            "scenario": "device_classes",
+            "n_clients": len(specs),
+            "rounds": rounds,
+            "epochs": epochs,
+            "cost_per_sample_rel": cm.cost_per_sample,
+            "deadline_violation_rate_cost": rate_cost,
+            "deadline_violation_rate_legacy": rate_legacy,
+            "n_coreset_cost": int(sum(r.n_coreset
+                                      for r in out_cost["history"])),
+            "n_coreset_legacy": int(sum(r.n_coreset
+                                        for r in out_legacy["history"])),
+            "wall_s_cost": wall_c,
+            "wall_s_legacy": wall_l,
+        },
+    }
+
+
 def sweep_scenarios(n_clients: int, rounds: int, epochs: int,
                     seed: int = 0, verbose: bool = False) -> Dict:
     """Every named scenario through both the sync server and the async
@@ -627,6 +748,16 @@ def main(argv=None) -> int:
                          "always sweeps every registered workload")
     ap.add_argument("--skip-workloads", action="store_true",
                     help="skip the per-workload fleet-rounds matrix")
+    ap.add_argument("--cost-model", action="store_true",
+                    help="measure per-workload step costs (FLOPs/sample) "
+                         "and run the cost-vs-legacy deadline-violation "
+                         "A/B on --cost-gate-workload under "
+                         "device_classes; gates cost rate <= legacy rate")
+    ap.add_argument("--cost-gate-workload", default="translm",
+                    choices=tuple(sorted(WORKLOADS)),
+                    help="workload for the cost-model divergence gate "
+                         "(default translm, the most expensive per "
+                         "sample)")
     ap.add_argument("--skip-scenarios", action="store_true")
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--skip-selection", action="store_true",
@@ -805,6 +936,26 @@ def main(argv=None) -> int:
         print(f"  [{'PASS' if wl_parity else 'FAIL'}] batched==loop "
               f"round-0 parity on every workload")
         ok = ok and wl_parity
+
+    if args.cost_model:
+        print(f"\n== cost model: measured per-sample step costs + "
+              f"deadline-violation A/B ({args.cost_gate_workload} x "
+              f"device_classes)")
+        cmrep = bench_cost_model(
+            gate_workload=args.cost_gate_workload,
+            n_clients=24 if args.smoke else 64,
+            rounds=3 if args.smoke else 6,
+            epochs=2 if args.smoke else 3,
+            seed=args.seed, verbose=True)
+        report["cost_model"] = cmrep
+        g = cmrep["gate"]
+        better = (g["deadline_violation_rate_cost"]
+                  <= g["deadline_violation_rate_legacy"] + 1e-12)
+        print(f"  [{'PASS' if better else 'FAIL'}] cost-conditioned "
+              f"violation rate {g['deadline_violation_rate_cost']:.3f} <= "
+              f"legacy sample-count rate "
+              f"{g['deadline_violation_rate_legacy']:.3f}")
+        ok = ok and better
 
     if not args.skip_scenarios:
         sc_clients = 24 if args.smoke else 64

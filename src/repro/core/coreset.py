@@ -34,18 +34,26 @@ class Coreset(NamedTuple):
 
 
 def coreset_budget(m: int, capability: float, deadline: float,
-                   epochs: int) -> int:
-    """bⁱ = ⌊(cⁱτ − mⁱ)/(E−1)⌋ clipped to [1, mⁱ] (paper §4.2)."""
-    if epochs <= 1:
-        return m
-    b = int(np.floor((capability * deadline - m) / (epochs - 1)))
-    return max(1, min(b, m))
+                   epochs: int, cost=None) -> int:
+    """bⁱ = ⌊(cⁱτ − mⁱ·κ)/(κ(E−1))⌋ clipped to [1, mⁱ] (paper §4.2).
+
+    ``cost`` is an optional ``repro.fed.cost.WorkloadCostModel`` (or a
+    per-sample cost scalar): the deadline buys cⁱτ *cost units*, of which
+    each sample-visit consumes κ.  ``cost=None`` is the legacy
+    samples-cost-1.0 mode — byte-identical to the pre-cost formula.
+    The arithmetic itself lives in ``repro.fed.cost`` (imported lazily:
+    ``repro.fed`` imports this module at package-init time).
+    """
+    from repro.fed.cost import resolve_cost
+    return resolve_cost(cost).budget(m, capability, deadline, epochs)
 
 
 def needs_coreset(m: int, capability: float, deadline: float,
-                  epochs: int) -> bool:
-    """Alg. 1 line 6: full-set training iff E·mⁱ ≤ cⁱτ."""
-    return epochs * m > capability * deadline
+                  epochs: int, cost=None) -> bool:
+    """Alg. 1 line 6: full-set training iff E·mⁱ·κ ≤ cⁱτ (see
+    ``coreset_budget`` for the ``cost`` parameter)."""
+    from repro.fed.cost import resolve_cost
+    return resolve_cost(cost).needs_coreset(m, capability, deadline, epochs)
 
 
 def build_coreset(features: jnp.ndarray, budget: int, *,

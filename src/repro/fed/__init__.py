@@ -1,3 +1,11 @@
+from repro.fed.cost import (  # noqa: F401  (leaf module: import first)
+    FORWARD_FRAC,
+    UNIT_COST,
+    CostPlan,
+    WorkloadCostModel,
+    resolve_cost,
+    workload_cost_model,
+)
 from repro.fed.aggregators import (  # noqa: F401
     AGGREGATORS,
     Aggregator,

@@ -99,6 +99,10 @@ class AsyncFLConfig:
     eval_every: int = 1           # eval every Nth record
     seed: int = 0
     trace: Optional[TraceConfig] = None
+    # per-sample step cost (repro.fed.cost.WorkloadCostModel or scalar;
+    # None = legacy): prices the derived deadline in the same units the
+    # strategy's LocalTrainer.cost prices client work
+    cost: Any = None
 
 
 def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
@@ -126,7 +130,8 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
               else model.init(jax.random.PRNGKey(cfg.seed)))
     deadline = cfg.deadline
     if deadline is None:
-        deadline = straggler_deadline(specs, cfg.epochs, cfg.straggler_pct)
+        deadline = straggler_deadline(specs, cfg.epochs, cfg.straggler_pct,
+                                      cfg.cost)
     aggregator = aggregator if aggregator is not None else FedAsync()
     aggregator.reset()
     trace = CapabilityTrace(cfg.trace) if cfg.trace is not None else None

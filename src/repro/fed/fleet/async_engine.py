@@ -61,7 +61,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.core.coreset import coreset_budget, needs_coreset
+from repro.fed.cost import resolve_cost
 from repro.fed.aggregators import (DelayedGradient, FedAsync, FedBuff,
                                    polynomial_staleness)
 from repro.fed.events import COMPLETE, DISPATCH, EventQueue
@@ -100,6 +100,10 @@ class AsyncFleetConfig:
     eval_every: int = 1           # eval every Nth flush
     seed: int = 0
     trace: Optional[TraceConfig] = None
+    # per-sample step cost (repro.fed.cost.WorkloadCostModel or scalar;
+    # None = legacy samples-cost-1.0) — prices budgets, the derived
+    # deadline, and realized dispatch durations
+    cost: Any = None
 
     def fleet_config(self) -> FleetConfig:
         """The grouping/training config shared with the sync fleet path
@@ -108,7 +112,7 @@ class AsyncFleetConfig:
                            lr=self.lr, use_kernel=self.use_kernel,
                            max_sweeps=self.max_sweeps,
                            weight_by_samples=self.weight_by_samples,
-                           seed=self.seed)
+                           seed=self.seed, cost=self.cost)
 
 
 # ---------------------------------------------------------------------------
@@ -308,9 +312,11 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
     rng = np.random.default_rng(cfg.seed)
     params = (init_params if init_params is not None
               else model.init(jax.random.PRNGKey(cfg.seed)))
+    cost = resolve_cost(cfg.cost)
     deadline = cfg.deadline
     if deadline is None:
-        deadline = straggler_deadline(specs, cfg.epochs, cfg.straggler_pct)
+        deadline = straggler_deadline(specs, cfg.epochs, cfg.straggler_pct,
+                                      cost)
     trace = CapabilityTrace(cfg.trace) if cfg.trace is not None else None
     eval_fn = make_eval_fn(model, test_data, eval_batch) if test_data else None
 
@@ -535,17 +541,19 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
             obs.metrics.counter("dispatches").inc()
             # budget under *realized* capability: a device in a slowdown
             # episode plans a smaller coreset, exactly as the sync
-            # FedCore client would at dispatch time
+            # FedCore client would at dispatch time.  The cost model
+            # prices each sample-visit (legacy unit cost when unset).
             if scheduler is not None:
                 b = int(scheduler.budget(ev.cid, deadline, cfg.epochs))
-            elif needs_coreset(spec.m, c_eff, deadline, cfg.epochs):
-                b = coreset_budget(spec.m, c_eff, deadline, cfg.epochs)
+            elif cost.needs_coreset(spec.m, c_eff, deadline, cfg.epochs):
+                b = cost.budget(spec.m, c_eff, deadline, cfg.epochs)
             else:
                 b = spec.m
             kq = 0 if b >= spec.m else _floor_pow4(b)
             work = float(cfg.epochs * spec.m if kq == 0
                          else spec.m + (cfg.epochs - 1) * kq)
-            duration = (work / c_eff) * tracei.jitter(spec, k_idx)
+            duration = cost.duration(work, c_eff) * tracei.jitter(spec,
+                                                                  k_idx)
             pending[ev.cid] = _Buffered(
                 cid=ev.cid, v0=ev.version, budget=b, k=kq, m=spec.m,
                 work=work, duration=duration, staleness=0)
@@ -559,7 +567,8 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
         busy_time[ev.cid] += ev.duration
         obs.metrics.histogram("client_busy_s").observe(ev.duration)
         if scheduler is not None:
-            scheduler.observe(ev.cid, e.work, ev.duration)
+            scheduler.observe(ev.cid, float(cost.work_units(e.work)),
+                              ev.duration)
         e.staleness = version - e.v0
         staleness_log.append(e.staleness)
         obs.metrics.histogram("staleness", exact=True).observe(e.staleness)

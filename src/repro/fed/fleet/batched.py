@@ -44,8 +44,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.coreset import (build_coreset_batched, coreset_budget,
-                                needs_coreset)
+from repro.core.coreset import build_coreset_batched
+from repro.fed.cost import resolve_cost
 from repro.fed.fleet.workloads import client_num_samples
 from repro.fed.server import RoundRecord, make_eval_fn
 from repro.fed.simulator import (CapabilityTrace, ClientSpec,
@@ -69,6 +69,13 @@ class FleetConfig:
     weight_by_samples: bool = True  # aggregate ∝ mⁱ (fleet cohorts are not
     # sampled ∝ mⁱ, so size weighting is the unbiased choice here)
     seed: int = 0
+    # per-sample step cost (repro.fed.cost.WorkloadCostModel; None =
+    # legacy samples-cost-1.0): budgets, derived deadlines, and realized
+    # durations all price a sample-visit through this model, so a
+    # deadline means FLOPs, not raw sample counts.  Group quantization
+    # (`_floor_pow4`) is unchanged — cost rescales what a budget *is*,
+    # not how budgets map to cohort groups.
+    cost: Any = None
 
 
 @dataclasses.dataclass
@@ -133,12 +140,16 @@ def _pad_rows(v: np.ndarray, m_pad: int) -> np.ndarray:
 
 
 def nominal_budgets(specs: Sequence[ClientSpec], deadline: float,
-                    epochs: int) -> Dict[int, int]:
+                    epochs: int, cost=None) -> Dict[int, int]:
     """Paper §4.2 budgets from nominal capabilities: bⁱ for clients that
     need a coreset under (τ, E), mⁱ (full set) for the rest.  The shared
-    no-scheduler default of the fleet driver, sweep, and tests."""
-    return {s.cid: (coreset_budget(s.m, s.c, deadline, epochs)
-                    if needs_coreset(s.m, s.c, deadline, epochs) else s.m)
+    no-scheduler default of the fleet driver, sweep, and tests.  ``cost``
+    (a ``repro.fed.cost.WorkloadCostModel`` or per-sample scalar; None =
+    legacy) prices each sample-visit."""
+    cm = resolve_cost(cost)
+    return {s.cid: (cm.budget(s.m, s.c, deadline, epochs)
+                    if cm.needs_coreset(s.m, s.c, deadline, epochs)
+                    else s.m)
             for s in specs}
 
 
@@ -733,8 +744,10 @@ def run_fleet(model, clients_data: Sequence[Pytree],
         eng = FleetEngine(model, cfg)
     params = (init_params if init_params is not None
               else model.init(jax.random.PRNGKey(cfg.seed)))
+    cost = resolve_cost(cfg.cost)
     if deadline is None:
-        deadline = straggler_deadline(specs, cfg.epochs, straggler_pct)
+        deadline = straggler_deadline(specs, cfg.epochs, straggler_pct,
+                                      cost)
     cap_trace = CapabilityTrace(trace) if trace is not None else None
     eval_fn = make_eval_fn(model, test_data, 512) if test_data else None
     # per-client dispatch cursors: the CapabilityTrace is defined per
@@ -758,7 +771,7 @@ def run_fleet(model, clients_data: Sequence[Pytree],
                            for cid in cohort}
             else:
                 cohort = list(range(len(specs)))
-                budgets = nominal_budgets(specs, deadline, cfg.epochs)
+                budgets = nominal_budgets(specs, deadline, cfg.epochs, cost)
         params, stats = run_fleet_round(eng, params, clients_data, cohort,
                                         budgets, round_seed=r, mode=mode)
         durations = []
@@ -766,12 +779,15 @@ def run_fleet(model, clients_data: Sequence[Pytree],
             for cid, work in zip(stats.cids, stats.work):
                 s = specs[cid]
                 k = tracei.begin(cid)
-                dur = work / tracei.capability(s, k)
+                # stats.work counts sample-visits; the cost model prices
+                # them into duration seconds and scheduler work units
+                dur = cost.duration(work, tracei.capability(s, k))
                 dur *= tracei.jitter(s, k)
                 durations.append(dur)
                 obs.metrics.histogram("client_busy_s").observe(dur)
                 if scheduler is not None:
-                    scheduler.observe(int(cid), float(work), float(dur))
+                    scheduler.observe(int(cid), float(cost.work_units(work)),
+                                      float(dur))
         train_loss = (float(np.mean(stats.losses)) if stats.losses.size
                       else float("nan"))
         if scheduler is not None:

@@ -125,7 +125,7 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
                  fleet_engine: str = "batched",
                  use_kernel: Optional[bool] = None,
                  workload=None, n_clients: int = 24,
-                 verbose: bool = False) -> Dict[str, Any]:
+                 cost=None, verbose: bool = False) -> Dict[str, Any]:
     """Drive one named scenario through one runtime.
 
     ``runtime`` ∈ {"sync", "async", "fleet", "async_fleet"}: the
@@ -154,6 +154,12 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
     validated against the workload's declared schema.  The result dict
     gains ``scenario``, ``runtime``, and (with a workload) ``workload``
     keys.
+
+    ``cost`` (a ``repro.fed.cost.WorkloadCostModel``, a per-sample
+    scalar, or None for the legacy samples-cost-1.0 unit) prices one
+    sample-visit of the workload and is threaded into whichever
+    runtime's config derives deadlines, budgets, and durations — see
+    ``repro.fed.cost.workload_cost_model`` for measuring it.
     """
     # late imports: repro.fed.{server,events,strategies} import nothing from
     # fleet, keeping this the only direction of coupling
@@ -188,8 +194,10 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
     if runtime == "sync":
         cfg = FLConfig(rounds=rounds, clients_per_round=clients_per_round,
                        epochs=epochs, batch_size=batch_size, lr=lr,
-                       straggler_pct=straggler_pct, seed=seed, trace=trace)
-        strat = FedCore(LocalTrainer(model, lr, batch_size), core_cfg)
+                       straggler_pct=straggler_pct, seed=seed, trace=trace,
+                       cost=cost)
+        strat = FedCore(LocalTrainer(model, lr, batch_size, cost=cost),
+                        core_cfg)
         out = run_federated(model, clients_data, specs, strat, cfg,
                             test_data=test_data, scheduler=scheduler,
                             verbose=verbose)
@@ -198,15 +206,17 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
             max_updates=max_updates or rounds * clients_per_round,
             concurrency=concurrency, epochs=epochs, batch_size=batch_size,
             lr=lr, straggler_pct=straggler_pct,
-            record_every=clients_per_round, seed=seed, trace=trace)
-        strat = FedCore(LocalTrainer(model, lr, batch_size), core_cfg)
+            record_every=clients_per_round, seed=seed, trace=trace,
+            cost=cost)
+        strat = FedCore(LocalTrainer(model, lr, batch_size, cost=cost),
+                        core_cfg)
         out = run_federated_async(model, clients_data, specs, strat, cfg,
                                   aggregator=aggregator,
                                   test_data=test_data, scheduler=scheduler,
                                   verbose=verbose)
     elif runtime == "fleet":
         cfg = FleetConfig(epochs=epochs, batch_size=batch_size, lr=lr,
-                          seed=seed, use_kernel=use_kernel)
+                          seed=seed, use_kernel=use_kernel, cost=cost)
         out = run_fleet(model, clients_data, specs, cfg, rounds=rounds,
                         scheduler=scheduler, trace=trace,
                         straggler_pct=straggler_pct, test_data=test_data,
@@ -218,7 +228,7 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
             concurrency=max(concurrency, clients_per_round),
             epochs=epochs, batch_size=batch_size, lr=lr,
             straggler_pct=straggler_pct, seed=seed,
-            use_kernel=use_kernel, trace=trace)
+            use_kernel=use_kernel, trace=trace, cost=cost)
         out = run_async_fleet(model, clients_data, specs, cfg,
                               aggregator=aggregator, scheduler=scheduler,
                               test_data=test_data, engine=fleet_engine,

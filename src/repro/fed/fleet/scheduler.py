@@ -36,7 +36,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.coreset import coreset_budget, needs_coreset
+from repro.fed.cost import resolve_cost
 from repro.fed.simulator import ClientSpec
 from repro.obs import get_recorder
 
@@ -58,8 +58,12 @@ class AdaptiveParticipation:
     """FLANP doubling cohorts + slowdown-aware sampling + adaptive budgets."""
 
     def __init__(self, specs: Sequence[ClientSpec],
-                 cfg: ParticipationConfig | None = None):
+                 cfg: ParticipationConfig | None = None, cost=None):
         self.cfg = cfg or ParticipationConfig()
+        # per-sample step cost (repro.fed.cost; None = legacy unit): the
+        # EWMA observes work in *cost units*, so ``budget`` divides τ by
+        # what a sample-visit actually costs on this workload
+        self.cost = resolve_cost(cost)
         self.specs = list(specs)
         self.n = len(self.specs)
         self.sizes = np.array([s.m for s in self.specs], np.int64)
@@ -149,12 +153,12 @@ class AdaptiveParticipation:
 
     def budget(self, cid: int, deadline: float, epochs: int) -> int:
         """Coreset budget from *observed* capability (paper §4.2 with
-        cⁱ ← EWMA of realized capability)."""
+        cⁱ ← EWMA of realized capability, in cost units/second)."""
         s = self.specs[cid]
         c_obs = float(self.observed[cid])
-        if not needs_coreset(s.m, c_obs, deadline, epochs):
+        if not self.cost.needs_coreset(s.m, c_obs, deadline, epochs):
             return s.m
-        return coreset_budget(s.m, c_obs, deadline, epochs)
+        return self.cost.budget(s.m, c_obs, deadline, epochs)
 
     def summary(self) -> dict:
         return {

@@ -30,6 +30,10 @@ Registry (all sized for CPU-fleet simulation; pass overrides through
                  (``(S,)`` int32 token sequences with sequence labels).
   * ``xlstm``  — ``CharXLSTM`` (one exponential-gated mLSTM block from
                  ``repro.models.xlstm``) on the same char-LM data.
+  * ``translm`` — ``CharTransformer`` (one pre-norm decoder block using
+                 ``repro.models.attention``; its tri-state ``use_kernel``
+                 routes attention through the Pallas flash kernel) on the
+                 same char-LM data.
 
 The engines themselves stay duck-typed — they accept any pytree-of-arrays
 client data whose top level is a dict of named fields — so a new workload
@@ -39,14 +43,17 @@ FleetWorkload".
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Mapping, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import dense_init
+from repro.models.attention import init_attention, multihead_attention
+from repro.models.layers import (dense_init, init_mlp, init_rmsnorm, mlp,
+                                 rmsnorm)
 from repro.models.small import (IGNORE, CharLSTM, LogisticRegression,
                                 SmallCNN, _last_layer_grad_feature,
                                 _weighted_ce)
@@ -195,6 +202,84 @@ class CharXLSTM:
 
 
 # ---------------------------------------------------------------------------
+# transformer char-LM: one pre-norm decoder block over the flash kernel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CharTransformer:
+    """Char-LM built from one pre-norm decoder block of
+    ``repro.models.attention``.
+
+    Same FLModel interface and batch schema as ``CharLSTM``/``CharXLSTM``
+    — tokens in, next-token logits out — but the sequence mixer is causal
+    multi-head self-attention with RoPE.  ``use_kernel`` is the repo's
+    tri-state Pallas switch (PR 4 semantics): ``True`` routes attention
+    through the ``kernels/flash_attention`` Pallas kernel (interpret mode
+    off-TPU), ``False`` forces the identical-math jnp path, ``None``
+    auto-selects by backend via ``resolve_use_kernel``.  Resolution
+    happens at trace time, outside any jit boundary's dynamic values, so
+    both settings share the usual compilation-cache behaviour.
+    """
+    vocab: int = 64
+    d_model: int = 32
+    n_heads: int = 2
+    d_ff: int = 64
+    use_kernel: Optional[bool] = None
+    feature_space: str = "last_layer_grad"
+
+    def _cfg(self) -> ModelConfig:
+        return ModelConfig(arch_id="char_translm", family="transformer",
+                           d_model=self.d_model, n_heads=self.n_heads,
+                           n_kv_heads=self.n_heads, vocab_size=self.vocab)
+
+    def _impl(self) -> str:
+        from repro.kernels.ops import resolve_use_kernel
+        return "pallas" if resolve_use_kernel(self.use_kernel) else "naive"
+
+    def init(self, key):
+        cfg = self._cfg()
+        ks = jax.random.split(key, 4)
+        return {
+            "embed": jax.random.normal(ks[0], (self.vocab, self.d_model))
+            * 0.1,
+            "norm_attn": init_rmsnorm(self.d_model),
+            "attn": init_attention(ks[1], cfg),
+            "norm_mlp": init_rmsnorm(self.d_model),
+            "mlp": init_mlp(ks[2], cfg, d_ff=self.d_ff),
+            "norm_out": init_rmsnorm(self.d_model),
+            "w_out": dense_init(ks[3], self.d_model, self.vocab),
+            "b_out": jnp.zeros((self.vocab,)),
+        }
+
+    def logits(self, params, tokens):
+        cfg = self._cfg()
+        x = params["embed"][tokens]                     # (B, S, d)
+        x = x + multihead_attention(
+            params["attn"], cfg, rmsnorm(params["norm_attn"], x),
+            causal=True, impl=self._impl())
+        x = x + mlp(params["mlp"], rmsnorm(params["norm_mlp"], x),
+                    act=cfg.act)
+        x = rmsnorm(params["norm_out"], x)
+        return x @ params["w_out"] + params["b_out"]
+
+    def loss(self, params, batch):
+        logits = self.logits(params, batch["x"])
+        total, per_example = _weighted_ce(logits, batch["y"],
+                                          batch.get("weights"))
+        return total, {"loss": total, "per_example_loss": per_example}
+
+    def accuracy(self, params, batch):
+        logits = self.logits(params, batch["x"])
+        valid = batch["y"] != IGNORE
+        correct = (jnp.argmax(logits, -1) == batch["y"]) & valid
+        return jnp.sum(correct) / jnp.maximum(jnp.sum(valid), 1)
+
+    def grad_features(self, params, batch):
+        logits = self.logits(params, batch["x"])
+        return _last_layer_grad_feature(logits, batch["y"], params["w_out"])
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
@@ -279,11 +364,25 @@ def _xlstm_workload() -> FleetWorkload:
                     "same sequence data as charlm")
 
 
+def _translm_workload() -> FleetWorkload:
+    from repro.data.charlm import VOCAB
+    return FleetWorkload(
+        name="translm",
+        model=CharTransformer(vocab=VOCAB, d_model=32, n_heads=2),
+        schema={"x": ArraySpec((_CHARLM_SEQ_LEN,), "int32"),
+                "y": ArraySpec((_CHARLM_SEQ_LEN,), "int32")},
+        make_clients=_charlm_clients,
+        description="one-block pre-norm decoder transformer char-LM "
+                    "(flash-attention kernel capable) on the same "
+                    "sequence data as charlm")
+
+
 WORKLOADS: Dict[str, Callable[[], FleetWorkload]] = {
     "mlp": _mlp_workload,
     "cnn": _cnn_workload,
     "charlm": _charlm_workload,
     "xlstm": _xlstm_workload,
+    "translm": _translm_workload,
 }
 
 

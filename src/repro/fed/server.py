@@ -44,6 +44,11 @@ class FLConfig:
     # same machinery the async runtime uses — lets scenario sweeps and
     # participation schedulers see realistic durations in sync rounds too
     trace: Optional[TraceConfig] = None
+    # per-sample step cost (repro.fed.cost.WorkloadCostModel or scalar;
+    # None = legacy samples-cost-1.0): prices the derived deadline in the
+    # same units the strategy's LocalTrainer.cost prices client work, so
+    # τ means FLOPs, not raw sample counts
+    cost: Any = None
 
 
 @dataclasses.dataclass
@@ -88,7 +93,8 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
               else model.init(jax.random.PRNGKey(cfg.seed)))
     deadline = cfg.deadline
     if deadline is None:
-        deadline = straggler_deadline(specs, cfg.epochs, cfg.straggler_pct)
+        deadline = straggler_deadline(specs, cfg.epochs, cfg.straggler_pct,
+                                      cfg.cost)
 
     history: List[RoundRecord] = []
     eval_fn = make_eval_fn(model, test_data, eval_batch) if test_data else None

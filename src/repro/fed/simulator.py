@@ -19,15 +19,23 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.fed.cost import resolve_cost
+
 
 @dataclasses.dataclass(frozen=True)
 class ClientSpec:
     cid: int
     m: int          # training-set size
-    c: float        # capability (samples / second)
+    c: float        # capability (cost units / second; legacy: samples/s)
 
-    def full_round_time(self, epochs: int) -> float:
-        return epochs * self.m / self.c
+    def full_round_time(self, epochs: int, cost=None) -> float:
+        """E full-set epochs.  ``cost`` (a ``repro.fed.cost``
+        ``WorkloadCostModel`` or per-sample scalar; None = legacy
+        samples-cost-1.0) prices each sample-visit, so the same cⁱ
+        yields workload-honest durations."""
+        if cost is None:
+            return epochs * self.m / self.c
+        return resolve_cost(cost).full_round_time(self.m, self.c, epochs)
 
 
 def sample_capabilities(n_clients: int, rng: np.random.Generator,
@@ -45,15 +53,16 @@ def make_client_specs(sizes: Sequence[int], rng: np.random.Generator
 
 
 def straggler_deadline(specs: Sequence[ClientSpec], epochs: int,
-                       straggler_pct: float) -> float:
+                       straggler_pct: float, cost=None) -> float:
     """τ such that the slowest `straggler_pct`% of clients exceed it."""
-    times = np.array([s.full_round_time(epochs) for s in specs])
+    times = np.array([s.full_round_time(epochs, cost) for s in specs])
     return float(np.percentile(times, 100.0 - straggler_pct))
 
 
-def straggler_mask(specs: Sequence[ClientSpec], epochs: int, deadline: float
-                   ) -> np.ndarray:
-    return np.array([s.full_round_time(epochs) > deadline for s in specs])
+def straggler_mask(specs: Sequence[ClientSpec], epochs: int, deadline: float,
+                   cost=None) -> np.ndarray:
+    return np.array([s.full_round_time(epochs, cost) > deadline
+                     for s in specs])
 
 
 # ---------------------------------------------------------------------------

@@ -14,16 +14,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.coreset import (FedCoreConfig, build_coreset, coreset_batch,
-                                coreset_budget, needs_coreset)
+from repro.core.coreset import FedCoreConfig, build_coreset, coreset_batch
 from repro.core.gradients import grad_features
 from repro.data.batching import epoch_batches
+from repro.fed.cost import FORWARD_FRAC, resolve_cost  # noqa: F401 — re-export
 from repro.fed.simulator import ClientSpec
 from repro.models.training import make_train_step
 from repro.obs import get_recorder
 from repro.optim.optimizers import sgd
-
-FORWARD_FRAC = 1.0 / 3.0  # forward-only pass cost relative to a train step
 
 
 @dataclasses.dataclass
@@ -62,13 +60,21 @@ def _pad_batch(batch: Dict[str, np.ndarray], batch_size: int
 
 
 class LocalTrainer:
-    """Holds the jitted step functions shared by every client/strategy."""
+    """Holds the jitted step functions shared by every client/strategy.
+
+    ``cost`` prices one sample-visit for this model's workload (a
+    ``repro.fed.cost.WorkloadCostModel``, a per-sample scalar, or None
+    for the legacy samples-cost-1.0 unit): every strategy's timing and
+    budget arithmetic routes through it, so deadlines mean FLOPs, not
+    raw sample counts.
+    """
 
     def __init__(self, model, lr: float, batch_size: int,
-                 prox_mu: float = 0.0):
+                 prox_mu: float = 0.0, cost=None):
         self.model = model
         self.batch_size = batch_size
         self.prox_mu = prox_mu
+        self.cost = resolve_cost(cost)
         opt = sgd(lr)
         self.opt = opt
         self._step = make_train_step(model.loss, opt, prox_mu=prox_mu,
@@ -121,7 +127,8 @@ class FedAvg(Strategy):
     def local_update(self, global_params, data, spec, deadline, epochs, rng):
         params, _, loss = self.trainer.run_epochs(global_params, data,
                                                   epochs, rng)
-        return ClientResult(params, spec.m, spec.full_round_time(epochs),
+        t = self.trainer.cost.full_round_time(spec.m, spec.c, epochs)
+        return ClientResult(params, spec.m, t,
                             epochs_done=epochs, final_loss=loss)
 
 
@@ -130,7 +137,7 @@ class FedAvgDS(Strategy):
     name = "fedavg_ds"
 
     def local_update(self, global_params, data, spec, deadline, epochs, rng):
-        t = spec.full_round_time(epochs)
+        t = self.trainer.cost.full_round_time(spec.m, spec.c, epochs)
         if t > deadline:
             return None  # dropped
         params, _, loss = self.trainer.run_epochs(global_params, data,
@@ -145,21 +152,22 @@ class FedProx(Strategy):
     name = "fedprox"
 
     def local_update(self, global_params, data, spec, deadline, epochs, rng):
-        full_t = spec.full_round_time(epochs)
+        cost = self.trainer.cost
+        full_t = cost.full_round_time(spec.m, spec.c, epochs)
         violated = False
         if full_t <= deadline:
             steps = None
             sim_t = full_t
             eff_epochs = float(epochs)
         else:
-            samples_budget = spec.c * deadline
+            samples_budget = cost.available_samples(spec.c, deadline)
             steps = max(1, int(samples_budget // self.trainer.batch_size))
             # honest timing: when even one batch exceeds the budget
-            # (cⁱτ < B), the clamped steps=1 plan genuinely overruns τ —
+            # (cⁱτ < B·κ), the clamped steps=1 plan genuinely overruns τ —
             # report the true duration and flag the violation, exactly as
             # FedCore's footnote-2 accounting does, instead of clamping
             # the reported time to the deadline.
-            sim_t = steps * self.trainer.batch_size / spec.c
+            sim_t = cost.duration(steps * self.trainer.batch_size, spec.c)
             violated = sim_t > deadline * (1.0 + 1e-9)
             eff_epochs = steps * self.trainer.batch_size / spec.m
         params, _, loss = self.trainer.run_epochs(
@@ -181,40 +189,33 @@ class FedCore(Strategy):
 
     def local_update(self, global_params, data, spec, deadline, epochs, rng):
         model = self.trainer.model
+        cost = self.trainer.cost
         obs = get_recorder()
-        if not needs_coreset(spec.m, spec.c, deadline, epochs):
+        if not cost.needs_coreset(spec.m, spec.c, deadline, epochs):
             with obs.span("local_sgd", cid=spec.cid):
                 params, _, loss = self.trainer.run_epochs(global_params,
                                                           data, epochs, rng)
-            return ClientResult(params, spec.m, spec.full_round_time(epochs),
+            return ClientResult(params, spec.m,
+                                cost.full_round_time(spec.m, spec.c, epochs),
                                 epochs_done=epochs, final_loss=loss)
 
         cc = self.core_cfg
-        can_full_first_epoch = spec.c * deadline > spec.m and epochs > 1
         with obs.span("grad_features", cid=spec.cid):
             feats = grad_features(model, global_params, data)
-        eff_epochs = epochs
-        if can_full_first_epoch:
-            budget = coreset_budget(spec.m, spec.c, deadline, epochs)
-            work = spec.m + (epochs - 1) * budget
-            if work > spec.c * deadline:  # budget floored at 1 but too slow
-                can_full_first_epoch = False
-        violated = False
-        if not can_full_first_epoch:
-            # §4.4 fallback: forward-only feature pass, coreset-only epochs;
-            # for extreme stragglers also shed epochs (footnote 2: beyond
-            # some point no partial-work scheme can meet τ).
-            avail = spec.c * deadline - FORWARD_FRAC * spec.m
-            budget = max(1, min(int(avail // epochs), spec.m))
-            eff_epochs = max(1, min(epochs, int(avail // budget)))
-            work = FORWARD_FRAC * spec.m + eff_epochs * budget
-            # cⁱτ < m/3 + b: even the minimal plan overruns τ.  Alg. 1 has
-            # no budget left to shed — either drop the client (FedAvg-DS
-            # semantics, opt-in) or train the minimal plan and surface the
-            # violation instead of clamping silently.
-            violated = work > spec.c * deadline * (1.0 + 1e-9)
-            if violated and cc.drop_infeasible:
+        # Alg. 1 primary schedule (full-set epoch 0 + E−1 coreset epochs at
+        # the §4.2 budget) and the §4.4 fallback (forward-only feature
+        # pass, coreset-only epochs, epoch shedding for extreme stragglers,
+        # footnote-2 honest-overrun accounting) both live in
+        # repro.fed.cost — one implementation shared with the fleet
+        # schedulers instead of a per-runtime copy.
+        plan = cost.primary_plan(spec.m, spec.c, deadline, epochs)
+        can_full_first_epoch = plan is not None
+        if plan is None:
+            plan = cost.fallback_plan(spec.m, spec.c, deadline, epochs)
+            if plan.violated and cc.drop_infeasible:
                 return None
+        budget, eff_epochs = plan.budget, plan.eff_epochs
+        work, violated = plan.work, plan.violated
 
         with obs.span("selection", cid=spec.cid, k=int(budget)):
             coreset = build_coreset(feats, budget, backend=cc.backend,
@@ -236,8 +237,8 @@ class FedCore(Strategy):
             with obs.span("coreset_epochs", cid=spec.cid):
                 params, _, loss = self.trainer.run_epochs(params, cdata,
                                                           eff_epochs, rng)
-        return ClientResult(params, spec.m, work / spec.c, used_coreset=True,
-                            coreset_size=int(budget),
+        return ClientResult(params, spec.m, cost.duration(work, spec.c),
+                            used_coreset=True, coreset_size=int(budget),
                             epochs_done=eff_epochs, final_loss=loss,
                             deadline_violated=violated)
 

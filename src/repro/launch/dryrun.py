@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: prove the distribution config is coherent without
 real hardware (deliverable e).
 
@@ -23,11 +20,26 @@ system, not in the harness.
 """
 import argparse
 import json
+import os
 import re
 import sys
 import time
 import traceback
 from typing import Any, Dict, Optional
+
+# The production mesh wants 512 virtual host devices (a multi-pod topology
+# simulated on CPU).  Forcing them is a process-global XLA setting, so it
+# only happens when this module IS the program (``python -m
+# repro.launch.dryrun`` executes it as ``__main__``) or on explicit
+# opt-in via REPRO_DRYRUN_FORCE_DEVICES=N — importing the module as a
+# library must not reconfigure the host's device count as an import-time
+# side effect.  XLA reads the flag at backend init (first jax use), so
+# setting it here — after the package imports above already pulled in
+# jax — is still in time.
+if __name__ == "__main__" or os.environ.get("REPRO_DRYRUN_FORCE_DEVICES"):
+    from repro.utils.xla_env import force_host_devices_here
+    force_host_devices_here(
+        int(os.environ.get("REPRO_DRYRUN_FORCE_DEVICES", "512")))
 
 import jax
 import jax.numpy as jnp

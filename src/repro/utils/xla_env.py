@@ -14,6 +14,23 @@ import re
 from typing import Dict, Optional
 
 
+def force_host_devices_here(n_devices: int) -> None:
+    """Pin THIS process's ``XLA_FLAGS`` to ``n_devices`` virtual CPU devices.
+
+    In-place sibling of ``forced_host_device_env`` for entry points that
+    own their process (the dryrun CLI).  XLA reads the flag once when the
+    backend initializes — the first ``jax.devices()`` / array op — so
+    calling this after ``import jax`` but before any jax *use* is still
+    effective.  Any pre-existing forced count is stripped first, same
+    rewrite rule as the subprocess builder.
+    """
+    flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                   os.environ.get("XLA_FLAGS", ""))
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_devices} "
+        + flags).strip()
+
+
 def forced_host_device_env(n_devices: int,
                            repo_root: Optional[str] = None
                            ) -> Dict[str, str]:

@@ -33,3 +33,36 @@ def test_dryrun_single_combination(tmp_path, args, expect_arch):
     assert rec["memory"]["bytes_per_device"] > 0
     assert rec["cost"].get("flops", 0) > 0
     assert "total_bytes" in rec["collectives"]
+
+
+def _no_xla_flags_env():
+    env = {**os.environ, "PYTHONPATH": f"{ROOT}/src", "JAX_PLATFORMS": "cpu"}
+    env.pop("XLA_FLAGS", None)
+    return env
+
+
+def test_dryrun_import_has_no_device_side_effect():
+    """Importing the module as a library must not force 512 host devices
+    (the flag is gated to __main__ / explicit opt-in)."""
+    res = subprocess.run(
+        [sys.executable, "-c",
+         "import repro.launch.dryrun, os, jax; "
+         "assert '--xla_force_host_platform_device_count' not in "
+         "os.environ.get('XLA_FLAGS', ''), os.environ['XLA_FLAGS']; "
+         "assert len(jax.devices()) == 1, jax.devices()"],
+        capture_output=True, text=True, timeout=120,
+        env=_no_xla_flags_env(), cwd=ROOT)
+    assert res.returncode == 0, res.stderr[-2000:]
+
+
+def test_dryrun_import_opt_in_forces_devices():
+    """REPRO_DRYRUN_FORCE_DEVICES=N opts library imports into the forced
+    device count (what the old import-time side effect provided)."""
+    env = _no_xla_flags_env()
+    env["REPRO_DRYRUN_FORCE_DEVICES"] = "8"
+    res = subprocess.run(
+        [sys.executable, "-c",
+         "import repro.launch.dryrun, jax; "
+         "assert len(jax.devices()) == 8, jax.devices()"],
+        capture_output=True, text=True, timeout=120, env=env, cwd=ROOT)
+    assert res.returncode == 0, res.stderr[-2000:]

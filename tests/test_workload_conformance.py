@@ -32,7 +32,7 @@ from repro.fed.fleet.workloads import get_workload
 from repro.fed.server import make_eval_fn
 from repro.fed.simulator import straggler_deadline
 
-WORKLOADS = ("mlp", "cnn", "charlm", "xlstm")
+WORKLOADS = ("mlp", "cnn", "charlm", "xlstm", "translm")
 ENGINES = ("batched", "sharded")        # each compared against "loop"
 KERNELS = (True, False)                 # on = interpret-mode Pallas on CPU
 
@@ -145,6 +145,26 @@ def test_kernel_choice_does_not_change_medoids(fleet_bundles, workload):
         np.testing.assert_array_equal(s_on.medoids[cid], s_off.medoids[cid])
 
 
+def test_translm_attention_kernel_parity():
+    """translm's own tri-state ``use_kernel`` (Pallas flash attention in
+    interpret mode vs the identical-math jnp path) is an execution
+    detail of the model, separate from the selection-path switch the
+    matrix covers: the two implementations' logits must agree within
+    float32 tolerance on the same params and tokens."""
+    import jax.numpy as jnp
+
+    from repro.data.charlm import VOCAB
+    from repro.fed.fleet.workloads import CharTransformer
+
+    wl = get_workload("translm")
+    clients = wl.make_clients(n_clients=1, seed=0)
+    params = wl.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(clients[0]["x"][:8])
+    on = CharTransformer(vocab=VOCAB, use_kernel=True).logits(params, x)
+    off = CharTransformer(vocab=VOCAB, use_kernel=False).logits(params, x)
+    np.testing.assert_allclose(np.asarray(on), np.asarray(off), atol=1e-4)
+
+
 # ---------------------------------------------------------------------------
 # determinism goldens for the new workloads
 # ---------------------------------------------------------------------------
@@ -247,7 +267,7 @@ def test_async_fleet_matches_loop_reference(fleet_bundles, workload):
 # ---------------------------------------------------------------------------
 
 def test_registry_names_and_schemas():
-    for name in ("mlp", "cnn", "charlm", "xlstm"):
+    for name in ("mlp", "cnn", "charlm", "xlstm", "translm"):
         wl = get_workload(name)
         assert wl.name == name
         assert set(wl.schema) == {"x", "y"}
