@@ -2,7 +2,8 @@ PY ?= python
 
 .PHONY: test ci bench-async bench-fleet bench-fleet-smoke \
 	bench-fleet-sharded bench-fleet-async bench-selection \
-	bench-fleet-workloads bench-fleet-translm bench-cost report lint-noprint
+	bench-fleet-workloads bench-fleet-translm bench-cost bench-faults \
+	report lint-noprint
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -80,6 +81,17 @@ bench-cost:
 	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
 		--smoke --skip-engine --skip-scenarios --skip-selection \
 		--skip-workloads --cost-model
+
+# fault matrix + Byzantine robustness gate: dropout / churn / sign-flip
+# Byzantine profiles crossed with the server aggregation rules
+# (weighted_mean / trimmed_mean / median / krum) on the mlp fleet, plus
+# the keep-green gate — under 20% sign-flip Byzantine clients at least
+# one robust aggregator must beat weighted_mean's final accuracy;
+# recorded in BENCH_fleet.json["faults"] with the margin
+bench-faults:
+	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
+		--smoke --skip-engine --skip-scenarios --skip-selection \
+		--skip-workloads --faults
 
 # event-driven async fleet engine: throughput at the reference fleet
 # size vs the sync batched round, plus the 100k-client lazy-data scale

@@ -690,6 +690,87 @@ def bench_cost_model(gate_workload: str = "translm", n_clients: int = 24,
     }
 
 
+def bench_faults(n_clients: int = 20, rounds: int = 3,
+                 gate_rounds: int = 12, epochs: int = 1,
+                 batch_size: int = 8, seed: int = 0,
+                 verbose: bool = False) -> Dict:
+    """Fault matrix + the Byzantine robustness gate.
+
+    Part 1 crosses fault profiles with server aggregation rules on the
+    mlp fleet workload (short horizon — it checks every cell *runs* and
+    records its fault accounting, not asymptotics).
+
+    Part 2 is the gate: under 20% sign-flip Byzantine clients, at least
+    one robust aggregator's final eval accuracy must exceed
+    weighted-mean's.  Sign-flip only *slows* the mean early on — the
+    separation appears once honest clients approach their optimum and
+    the Byzantine bias becomes the binding constraint — so the gate runs
+    a longer horizon than the matrix."""
+    from repro.fed.fleet.batched import run_fleet
+
+    wl = get_workload("mlp")
+    clients = wl.make_clients(n_clients=n_clients, seed=seed,
+                              mean_samples=60.0, std_samples=40.0)
+    train, test = train_test_split_clients(clients, test_frac=0.15)
+    specs, _ = build_scenario("uniform", client_sizes(train), seed)
+
+    def run(agg, profile, n_rounds):
+        cfg = FleetConfig(epochs=epochs, batch_size=batch_size,
+                          seed=seed, aggregator=agg)
+        out = run_fleet(wl, train, specs, cfg, rounds=n_rounds,
+                        test_data=test, faults=profile)
+        hist = out["history"]
+        return {
+            "final_test_acc": float(hist[-1].test_acc),
+            "final_test_loss": float(hist[-1].test_loss),
+            "accs": [float(r.test_acc) for r in hist],
+            "n_dropped": int(sum(r.n_dropped for r in hist)),
+            "n_violations": int(sum(r.n_violations for r in hist)),
+        }
+
+    profiles = ("none", "dropout", "churn", "byzantine_signflip")
+    aggs = ("weighted_mean", "trimmed_mean", "median", "krum")
+    matrix = {}
+    for profile in profiles:
+        row = {}
+        for agg in aggs:
+            cell = row[agg] = run(agg, profile, rounds)
+            if verbose:
+                print(f"  {profile:20s} {agg:14s} "
+                      f"acc={cell['final_test_acc']:.3f} "
+                      f"dropped={cell['n_dropped']}")
+        matrix[profile] = row
+
+    gate_aggs = ("weighted_mean", "trimmed_mean", "norm_clip")
+    gate = {agg: run(agg, "byzantine_signflip", gate_rounds)
+            for agg in gate_aggs}
+    mean_acc = gate["weighted_mean"]["final_test_acc"]
+    best_robust = max((a for a in gate_aggs if a != "weighted_mean"),
+                      key=lambda a: gate[a]["final_test_acc"])
+    margin = gate[best_robust]["final_test_acc"] - mean_acc
+    if verbose:
+        print(f"  gate ({gate_rounds} rounds, byzantine_signflip): "
+              f"{best_robust} {gate[best_robust]['final_test_acc']:.3f} "
+              f"vs weighted_mean {mean_acc:.3f} (margin {margin:+.3f})")
+    return {
+        "workload": "mlp",
+        "scenario": "uniform",
+        "n_clients": len(specs),
+        "rounds": rounds,
+        "epochs": epochs,
+        "matrix": matrix,
+        "gate": {
+            "profile": "byzantine_signflip",
+            "rounds": gate_rounds,
+            "cells": gate,
+            "best_robust": best_robust,
+            "weighted_mean_acc": mean_acc,
+            "best_robust_acc": gate[best_robust]["final_test_acc"],
+            "robust_margin": margin,
+        },
+    }
+
+
 def sweep_scenarios(n_clients: int, rounds: int, epochs: int,
                     seed: int = 0, verbose: bool = False) -> Dict:
     """Every named scenario through both the sync server and the async
@@ -758,6 +839,12 @@ def main(argv=None) -> int:
                     help="workload for the cost-model divergence gate "
                          "(default translm, the most expensive per "
                          "sample)")
+    ap.add_argument("--faults", action="store_true",
+                    help="run the fault matrix (dropout / churn / "
+                         "Byzantine x aggregation rules) and the "
+                         "Byzantine robustness gate: under 20% sign-flip "
+                         "clients a robust aggregator must beat "
+                         "weighted_mean's final accuracy")
     ap.add_argument("--skip-scenarios", action="store_true")
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--skip-selection", action="store_true",
@@ -956,6 +1043,23 @@ def main(argv=None) -> int:
               f"legacy sample-count rate "
               f"{g['deadline_violation_rate_legacy']:.3f}")
         ok = ok and better
+
+    if args.faults:
+        print("\n== faults: dropout / churn / Byzantine x aggregation "
+              "rules, plus the sign-flip robustness gate")
+        frep = bench_faults(n_clients=20 if args.smoke else 48,
+                            rounds=3 if args.smoke else 6,
+                            gate_rounds=12 if args.smoke else 20,
+                            epochs=1, batch_size=8, seed=args.seed,
+                            verbose=True)
+        report["faults"] = frep
+        g = frep["gate"]
+        robust = g["robust_margin"] > 0.0
+        print(f"  [{'PASS' if robust else 'FAIL'}] {g['best_robust']} beats "
+              f"weighted_mean under {g['profile']}: "
+              f"{g['best_robust_acc']:.3f} vs {g['weighted_mean_acc']:.3f} "
+              f"(margin {g['robust_margin']:+.3f})")
+        ok = ok and robust
 
     if not args.skip_scenarios:
         sc_clients = 24 if args.smoke else 64

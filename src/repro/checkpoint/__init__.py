@@ -4,4 +4,5 @@ from repro.checkpoint.checkpoint import (  # noqa: F401
     latest_checkpoint,
     save_server_state,
     load_server_state,
+    load_server_meta,
 )

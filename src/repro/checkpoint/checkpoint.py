@@ -2,6 +2,15 @@
 
 Round-resumable server state = {params, round, rng_state} saved atomically
 (write temp + rename) so an interrupted run never corrupts the latest file.
+
+``save_pytree`` stores a JSON structure descriptor under the reserved
+``__treedef__`` key alongside the arrays, so ``load_pytree`` without a
+``like`` template round-trips the exact container structure (dict / list
+/ tuple / None) *and* leaf dtypes — including int64/float64 leaves that
+``jnp.asarray`` would silently downcast when x64 is disabled.  Trees
+with exotic pytree nodes (namedtuples, custom registrations) or
+non-string dict keys fall back to the legacy nested-dict reconstruction
+and still load exactly with ``like``.
 """
 from __future__ import annotations
 
@@ -16,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 _SEP = "/"
+_TREEDEF_KEY = "__treedef__"
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -37,27 +47,93 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def _treedef_desc(tree) -> Optional[Dict[str, Any]]:
+    """JSON-able structure descriptor, or None when the tree contains a
+    node the path encoding cannot round-trip (then callers must pass
+    ``like`` at load time, as before)."""
+    if tree is None:
+        return {"kind": "none"}
+    if isinstance(tree, dict):
+        keys = list(tree.keys())
+        if any(not isinstance(k, str) or _SEP in k or k.startswith("#")
+               for k in keys):
+            return None
+        children = {}
+        for k in keys:
+            d = _treedef_desc(tree[k])
+            if d is None:
+                return None
+            children[k] = d
+        return {"kind": "dict", "children": children}
+    if isinstance(tree, tuple) and hasattr(tree, "_fields"):
+        return None  # namedtuple: plain-tuple rebuild would change type
+    if isinstance(tree, (list, tuple)):
+        children = []
+        for v in tree:
+            d = _treedef_desc(v)
+            if d is None:
+                return None
+            children.append(d)
+        return {"kind": "list" if isinstance(tree, list) else "tuple",
+                "children": children}
+    return {"kind": "leaf"}
+
+
+def _rebuild(desc: Dict[str, Any], flat: Dict[str, np.ndarray],
+             prefix: str):
+    kind = desc["kind"]
+    if kind == "none":
+        return None
+    if kind == "leaf":
+        val = flat[prefix]
+        arr = jnp.asarray(val)
+        # x64-disabled jax downcasts int64/float64 — keep the exact
+        # saved dtype as a numpy leaf instead of silently truncating
+        return val if arr.dtype != val.dtype else arr
+    join = (lambda part: part if not prefix else f"{prefix}{_SEP}{part}")
+    if kind == "dict":
+        return {k: _rebuild(d, flat, join(k))
+                for k, d in desc["children"].items()}
+    seq = [_rebuild(d, flat, join(f"#{i}"))
+           for i, d in enumerate(desc["children"])]
+    return seq if kind == "list" else tuple(seq)
+
+
 def save_pytree(path: str, tree) -> None:
     flat = _flatten(tree)
+    desc = _treedef_desc(tree)
+    if desc is not None:
+        flat[_TREEDEF_KEY] = np.array(json.dumps(desc))
     directory = os.path.dirname(os.path.abspath(path))
     os.makedirs(directory, exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz")
-    with os.fdopen(fd, "wb") as f:
-        np.savez(f, **flat)
-    os.replace(tmp, path)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
 
 
 def load_pytree(path: str, like=None):
-    """Load a pytree.  If `like` is given, restore its exact structure."""
+    """Load a pytree.  If `like` is given, restore its exact structure;
+    otherwise rebuild from the saved ``__treedef__`` descriptor (exact
+    containers + dtypes), falling back to nested dicts for legacy files."""
     with np.load(path, allow_pickle=False) as data:
-        flat = {k: data[k] for k in data.files if k != "__treedef__"}
+        flat = {k: data[k] for k in data.files if k != _TREEDEF_KEY}
+        desc_raw = (str(data[_TREEDEF_KEY])
+                    if _TREEDEF_KEY in data.files else None)
     if like is not None:
         leaves_with_paths = jax.tree_util.tree_flatten_with_path(like)
         paths = [_SEP.join(_path_str(p) for p in path)
                  for path, _ in leaves_with_paths[0]]
         leaves = [jnp.asarray(flat[p]) for p in paths]
         return jax.tree_util.tree_unflatten(leaves_with_paths[1], leaves)
-    # otherwise reconstruct nested dicts from the path encoding
+    if desc_raw is not None:
+        return _rebuild(json.loads(desc_raw), flat, "")
+    # legacy files: reconstruct nested dicts from the path encoding
     out: Dict[str, Any] = {}
     for key, val in flat.items():
         parts = key.split(_SEP)
@@ -68,29 +144,54 @@ def load_pytree(path: str, like=None):
     return out
 
 
+def _readable_npz(path: str) -> bool:
+    try:
+        with np.load(path, allow_pickle=False) as data:
+            data.files
+        return True
+    except Exception:
+        return False
+
+
 def latest_checkpoint(directory: str, prefix: str = "ckpt_"
                       ) -> Optional[str]:
+    """Newest *complete* checkpoint: partially-written or corrupt npz
+    files (e.g. a crash mid-copy onto the target name) are skipped so a
+    resume never trips over a torn file."""
     if not os.path.isdir(directory):
         return None
-    best, best_step = None, -1
+    candidates = []
     for name in os.listdir(directory):
         m = re.fullmatch(rf"{re.escape(prefix)}(\d+)\.npz", name)
-        if m and int(m.group(1)) > best_step:
-            best_step = int(m.group(1))
-            best = os.path.join(directory, name)
-    return best
+        if m:
+            candidates.append((int(m.group(1)), os.path.join(directory, name)))
+    for _, path in sorted(candidates, reverse=True):
+        if _readable_npz(path):
+            return path
+    return None
 
 
 def save_server_state(directory: str, round_idx: int, params,
                       extra: Optional[Dict[str, Any]] = None,
                       prefix: str = "ckpt_") -> str:
+    """Atomic {params npz + JSON meta} pair.  The meta sidecar is written
+    (atomically) *before* the npz is renamed into place, so a complete
+    npz always has its meta — a crash in between leaves only an orphan
+    json that ``latest_checkpoint`` never selects."""
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"{prefix}{round_idx:06d}.npz")
-    save_pytree(path, params)
+    meta_path = os.path.join(directory, f"{prefix}{round_idx:06d}.json")
     meta = {"round": round_idx, **(extra or {})}
-    with open(os.path.join(directory, f"{prefix}{round_idx:06d}.json"),
-              "w") as f:
-        json.dump(meta, f)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, meta_path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    save_pytree(path, params)
     return path
 
 
@@ -100,9 +201,24 @@ def load_server_state(directory: str, like=None, prefix: str = "ckpt_"
     if path is None:
         return None, -1
     params = load_pytree(path, like)
-    meta_path = path.replace(".npz", ".json")
+    meta_path = path[:-len(".npz")] + ".json"
     round_idx = -1
     if os.path.exists(meta_path):
         with open(meta_path) as f:
             round_idx = json.load(f).get("round", -1)
     return params, round_idx
+
+
+def load_server_meta(directory: str, prefix: str = "ckpt_"
+                     ) -> Optional[Dict[str, Any]]:
+    """Full JSON meta dict of the latest complete checkpoint (the
+    ``extra`` payload runtimes stash scheduler/RNG/event-loop state in),
+    or None when there is no checkpoint or no meta sidecar."""
+    path = latest_checkpoint(directory, prefix)
+    if path is None:
+        return None
+    meta_path = path[:-len(".npz")] + ".json"
+    if not os.path.exists(meta_path):
+        return None
+    with open(meta_path) as f:
+        return json.load(f)

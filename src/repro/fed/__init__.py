@@ -8,13 +8,17 @@ from repro.fed.cost import (  # noqa: F401  (leaf module: import first)
 )
 from repro.fed.aggregators import (  # noqa: F401
     AGGREGATORS,
+    ROBUST_METHODS,
     Aggregator,
     ClientUpdate,
     DelayedGradient,
     FedAsync,
     FedBuff,
+    RobustAggregate,
     SyncWeightedMean,
     polynomial_staleness,
+    robust_combine,
+    stack_params,
     weighted_mean_params,
 )
 from repro.fed.events import (  # noqa: F401
@@ -54,12 +58,17 @@ from repro.fed.strategies import (  # noqa: F401
 # fleet imports repro.fed.server/simulator, so this must stay the last
 # import in this module (the submodules above are fully initialized by now)
 from repro.fed.fleet import (  # noqa: E402,F401
+    FAULT_PROFILES,
     SCENARIOS,
     AdaptiveParticipation,
+    FaultProfile,
+    FaultTrace,
     FleetConfig,
     FleetEngine,
     ParticipationConfig,
     build_scenario,
+    dirichlet_label_skew,
+    get_fault_profile,
     run_fleet,
     run_scenario,
 )

@@ -19,11 +19,29 @@ either new global params (the model version advances) or ``None`` (the
 update was buffered).  Staleness is measured in server model versions:
 how many aggregations were applied between the update's dispatch and its
 arrival.
+
+A fourth family defends against the fault axes in
+``repro.fed.fleet.faults``: the **robust combine rules** (coordinate-wise
+trimmed mean and median, Krum / multi-Krum selection, and norm-clipping)
+operate on a *stacked* update set — a pytree whose leaves carry a leading
+client axis — so the fleet engines can feed them the vmapped per-client
+parameter stacks they already produce.  ``robust_combine`` is the
+functional entry point shared by all runtimes; ``RobustAggregate`` wraps
+it as a buffered streaming aggregator for the event-driven async server.
+Robust rules are deliberately *unweighted* over clients (trimmed mean /
+median / Krum): sample-count weights are attacker-controlled metadata,
+so honoring them would hand Byzantine clients a free amplifier.
+``norm_clip`` keeps weights but bounds each client's delta norm first.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.utils.tree import tree_add, tree_scale, tree_sub, tree_weighted_mean
 
@@ -45,12 +63,24 @@ def polynomial_staleness(staleness: int, exponent: float) -> float:
 
 
 def weighted_mean_params(trees: Sequence[Pytree], n_samples: Sequence[int],
-                         weight_by_samples: bool = True) -> Pytree:
-    """FedAvg aggregation: mean of ``trees`` weighted by mⁱ (or uniform)."""
+                         weight_by_samples: bool = True,
+                         fallback: Pytree = None) -> Pytree:
+    """FedAvg aggregation: mean of ``trees`` weighted by mⁱ (or uniform).
+
+    With no contributing mass — an empty ``trees`` or all-zero weights —
+    dividing by Σαᵢ would poison the model with NaNs; instead the round
+    no-ops and returns ``fallback`` (the round-start params, matching the
+    fleet engines' empty-cohort behaviour).  Without a fallback the
+    degenerate case raises."""
     if weight_by_samples:
         weights = [float(n) for n in n_samples]
     else:
         weights = [1.0] * len(trees)
+    if not trees or sum(weights) <= 0.0:
+        if fallback is not None:
+            return fallback
+        raise ValueError("weighted_mean_params: no updates / all-zero "
+                         "weights and no fallback params")
     return tree_weighted_mean(trees, weights)
 
 
@@ -92,9 +122,10 @@ class SyncWeightedMean(Aggregator):
         self.round_size = round_size
         self._buffer: List[ClientUpdate] = []
 
-    def aggregate(self, trees: Sequence[Pytree], n_samples: Sequence[int]
-                  ) -> Pytree:
-        return weighted_mean_params(trees, n_samples, self.weight_by_samples)
+    def aggregate(self, trees: Sequence[Pytree], n_samples: Sequence[int],
+                  fallback: Pytree = None) -> Pytree:
+        return weighted_mean_params(trees, n_samples, self.weight_by_samples,
+                                    fallback=fallback)
 
     def apply(self, global_params, update):
         if self.round_size is None:
@@ -105,14 +136,16 @@ class SyncWeightedMean(Aggregator):
             return None
         buf, self._buffer = self._buffer, []
         return self.aggregate([u.params for u in buf],
-                              [u.n_samples for u in buf])
+                              [u.n_samples for u in buf],
+                              fallback=global_params)
 
     def flush(self, global_params):
         if not self._buffer:
             return None
         buf, self._buffer = self._buffer, []
         return self.aggregate([u.params for u in buf],
-                              [u.n_samples for u in buf])
+                              [u.n_samples for u in buf],
+                              fallback=global_params)
 
     def reset(self):
         self._buffer = []
@@ -199,6 +232,8 @@ class FedBuff(Aggregator):
             w = float(u.n_samples) if self.weight_by_samples else 1.0
             weights.append(w * polynomial_staleness(u.staleness,
                                                     self.staleness_exponent))
+        if sum(weights) <= 0.0:
+            return global_params
         mean = tree_weighted_mean([u.params for u in buf], weights)
         if self.server_lr >= 1.0:
             return mean
@@ -222,9 +257,213 @@ class FedBuff(Aggregator):
         self._buffer = []
 
 
+# ---------------------------------------------------------------------------
+# robust combine rules (Byzantine-resilient aggregation)
+#
+# All rules consume a *stacked* update set: a pytree whose every leaf has
+# a leading client axis C — exactly the shape the vmapped fleet engines
+# emit — and reduce the client axis with jnp ops, so they run as single
+# fused XLA reductions rather than per-client Python loops.
+# ---------------------------------------------------------------------------
+
+ROBUST_METHODS = ("trimmed_mean", "median", "krum", "multi_krum", "norm_clip")
+
+
+def stack_params(trees: Sequence[Pytree]) -> Pytree:
+    """Stack per-client trees into one tree of (C, ...) leaves."""
+    if not trees:
+        raise ValueError("stack_params needs at least one tree")
+    return jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+                        *trees)
+
+
+def _flatten_stacked(stacked: Pytree) -> jnp.ndarray:
+    """(C, D) float32 view of a stacked pytree, leaves concatenated."""
+    leaves = jax.tree.leaves(stacked)
+    return jnp.concatenate(
+        [jnp.asarray(x).reshape(x.shape[0], -1).astype(jnp.float32)
+         for x in leaves], axis=1)
+
+
+def trimmed_mean_stacked(stacked: Pytree, trim_frac: float = 0.2) -> Pytree:
+    """Coordinate-wise β-trimmed mean: sort each coordinate over the
+    client axis, drop the ⌊βC⌋ smallest and largest values, average the
+    rest.  Tolerates up to ⌊βC⌋ arbitrary clients per coordinate."""
+    c = jax.tree.leaves(stacked)[0].shape[0]
+    t = min(int(trim_frac * c), (c - 1) // 2)
+
+    def red(x):
+        if t == 0:
+            return jnp.mean(x, axis=0)
+        return jnp.mean(jnp.sort(x, axis=0)[t:c - t], axis=0)
+
+    return jax.tree.map(red, stacked)
+
+
+def median_stacked(stacked: Pytree) -> Pytree:
+    """Coordinate-wise median over the client axis (the β → 1/2 limit of
+    the trimmed mean; breakdown point just under C/2)."""
+    return jax.tree.map(lambda x: jnp.median(x, axis=0), stacked)
+
+
+def krum_select(stacked: Pytree, n_byzantine: Optional[int] = None,
+                multi: int = 1) -> np.ndarray:
+    """Krum / multi-Krum selection (Blanchard et al., 2017).
+
+    Scores each client by the sum of its C − f − 2 smallest squared
+    distances to the other updates and returns the ``multi``
+    lowest-scoring client indices (ties broken by index — deterministic).
+    ``n_byzantine`` defaults to ⌈C/4⌉."""
+    v = _flatten_stacked(stacked)
+    c = v.shape[0]
+    f = int(n_byzantine) if n_byzantine is not None else max(1, c // 4)
+    sq = jnp.sum(v * v, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (v @ v.T)
+    d2 = jnp.maximum(d2, 0.0) + jnp.diag(jnp.full(c, jnp.inf))
+    k_near = max(1, min(c - f - 2, c - 1))
+    scores = np.asarray(
+        jnp.sum(jnp.sort(d2, axis=1)[:, :k_near], axis=1), np.float64)
+    order = np.argsort(scores, kind="stable")
+    return order[:max(1, min(int(multi), c))]
+
+
+def krum_stacked(stacked: Pytree, n_byzantine: Optional[int] = None,
+                 multi: int = 1) -> Pytree:
+    """Krum (``multi=1``: the single best-supported update) or
+    multi-Krum (uniform mean of the ``multi`` selected updates)."""
+    sel = krum_select(stacked, n_byzantine=n_byzantine, multi=multi)
+    if len(sel) == 1:
+        return jax.tree.map(lambda x: x[int(sel[0])], stacked)
+    idx = jnp.asarray(np.sort(sel))
+    return jax.tree.map(lambda x: jnp.mean(x[idx], axis=0), stacked)
+
+
+def norm_clip_stacked(stacked: Pytree, base: Pytree,
+                      weights: Optional[Sequence[float]] = None,
+                      clip: Optional[float] = None) -> Pytree:
+    """Norm-clipped weighted mean: each client's delta from ``base`` is
+    scaled down to at most ``clip`` (default: the median delta norm, so
+    the bound adapts to the honest majority), then the clipped deltas
+    are weighted-averaged back onto ``base``.  Defangs scaled/boosted
+    Byzantine updates while keeping sample-count weighting."""
+    v = _flatten_stacked(stacked)
+    vb = _flatten_stacked(jax.tree.map(lambda x: jnp.asarray(x)[None], base))[0]
+    norms = jnp.linalg.norm(v - vb[None, :], axis=1)
+    bound = jnp.median(norms) if clip is None else jnp.float32(clip)
+    scale = jnp.minimum(1.0, bound / jnp.maximum(norms, 1e-12))
+    c = v.shape[0]
+    w = (jnp.ones(c, jnp.float32) if weights is None
+         else jnp.asarray(np.asarray(weights, np.float32)))
+    total = jnp.sum(w)
+    coef = jnp.where(total > 0, w * scale / jnp.maximum(total, 1e-12), 0.0)
+    out = jax.tree.map(
+        lambda b, x: b + jnp.tensordot(coef, (x - b[None]).astype(jnp.float32),
+                                       axes=1).astype(b.dtype),
+        base, stacked)
+    return jax.tree.map(
+        lambda o, b: jnp.where(total > 0, o, b), out, base)
+
+
+def robust_combine(stacked: Pytree, method: str,
+                   weights: Optional[Sequence[float]] = None,
+                   base: Pytree = None, trim_frac: float = 0.2,
+                   n_byzantine: Optional[int] = None) -> Pytree:
+    """Combine a (C, ...) stacked update set with a named rule.
+
+    ``method`` is one of ``ROBUST_METHODS`` or ``"weighted_mean"`` (the
+    non-robust baseline, included so runtimes dispatch through one entry
+    point).  ``base`` — the round-start global params — is the fallback
+    for an empty stack and the reference point for ``norm_clip``.
+    Weights only affect ``weighted_mean`` and ``norm_clip``; the order-
+    statistic rules are unweighted by design (see module docstring)."""
+    c = (jax.tree.leaves(stacked)[0].shape[0]
+         if jax.tree.leaves(stacked) else 0)
+    if c == 0:
+        if base is not None:
+            return base
+        raise ValueError("robust_combine: empty update stack and no base")
+    if method == "weighted_mean":
+        w = ([1.0] * c if weights is None else [float(x) for x in weights])
+        if sum(w) <= 0.0:
+            if base is not None:
+                return base
+            raise ValueError("robust_combine: all-zero weights and no base")
+        wj = jnp.asarray(np.asarray(w, np.float32)) / np.float32(sum(w))
+        return jax.tree.map(
+            lambda x: jnp.tensordot(wj, jnp.asarray(x).astype(jnp.float32),
+                                    axes=1), stacked)
+    if method == "trimmed_mean":
+        return trimmed_mean_stacked(stacked, trim_frac=trim_frac)
+    if method == "median":
+        return median_stacked(stacked)
+    if method == "krum":
+        return krum_stacked(stacked, n_byzantine=n_byzantine, multi=1)
+    if method == "multi_krum":
+        f = int(n_byzantine) if n_byzantine is not None else max(1, c // 4)
+        return krum_stacked(stacked, n_byzantine=f,
+                            multi=max(1, c - f - 2))
+    if method == "norm_clip":
+        if base is None:
+            raise ValueError("norm_clip needs base (round-start) params")
+        return norm_clip_stacked(stacked, base, weights=weights)
+    raise ValueError(f"unknown combine method {method!r} (expected "
+                     f"weighted_mean or one of {ROBUST_METHODS})")
+
+
+class RobustAggregate(Aggregator):
+    """Buffered robust aggregation for the streaming (async) server.
+
+    Buffers ``round_size`` updates, then replaces the global model with
+    ``robust_combine`` over the buffered stack — the semi-synchronous
+    barrier shape of ``SyncWeightedMean``, with a Byzantine-resilient
+    combine rule inside.  ``flush`` merges a partial tail buffer."""
+
+    def __init__(self, method: str = "trimmed_mean", round_size: int = 8,
+                 weight_by_samples: bool = True, trim_frac: float = 0.2,
+                 n_byzantine: Optional[int] = None):
+        if method not in ROBUST_METHODS:
+            raise ValueError(f"unknown robust method {method!r} "
+                             f"(expected one of {ROBUST_METHODS})")
+        if round_size < 1:
+            raise ValueError(f"round_size must be >= 1, got {round_size}")
+        self.name = method
+        self.method = method
+        self.round_size = round_size
+        self.weight_by_samples = weight_by_samples
+        self.trim_frac = trim_frac
+        self.n_byzantine = n_byzantine
+        self._buffer: List[ClientUpdate] = []
+
+    def _combine(self, buf: List[ClientUpdate], global_params: Pytree
+                 ) -> Pytree:
+        weights = ([float(u.n_samples) for u in buf]
+                   if self.weight_by_samples else None)
+        return robust_combine(stack_params([u.params for u in buf]),
+                              self.method, weights=weights,
+                              base=global_params, trim_frac=self.trim_frac,
+                              n_byzantine=self.n_byzantine)
+
+    def apply(self, global_params, update):
+        self._buffer.append(update)
+        if len(self._buffer) < self.round_size:
+            return None
+        buf, self._buffer = self._buffer, []
+        return self._combine(buf, global_params)
+
+    def flush(self, global_params):
+        if not self._buffer:
+            return None
+        buf, self._buffer = self._buffer, []
+        return self._combine(buf, global_params)
+
+    def reset(self):
+        self._buffer = []
+
+
 AGGREGATORS = {
     "sync_mean": SyncWeightedMean,
     "fedasync": FedAsync,
     "fedbuff": FedBuff,
     "delayed_grad": DelayedGradient,
+    **{m: functools.partial(RobustAggregate, m) for m in ROBUST_METHODS},
 }

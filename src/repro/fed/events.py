@@ -110,7 +110,7 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
                         cfg: AsyncFLConfig,
                         aggregator: Optional[Aggregator] = None,
                         test_data: Optional[Dict] = None, init_params=None,
-                        eval_batch: int = 512, scheduler=None,
+                        eval_batch: int = 512, scheduler=None, faults=None,
                         verbose: bool = False) -> Dict[str, Any]:
     """Drive ``strategy`` through the async event loop until
     ``cfg.max_updates`` server updates have been applied.
@@ -121,9 +121,21 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
     restricted to its current cohort (FLANP doubling under asynchrony) and
     it is fed every completion's realized (work, duration) pair.
 
+    ``faults`` (a ``repro.fed.fleet.faults`` profile, registry name, or
+    None) injects seeded deterministic failures: mid-flight dropout
+    discards a completion *after* its dispatch was accounted (the
+    dispatch-trace cursor still advanced, so every other client's
+    capability/jitter draws are unchanged), churn masks dispatch by the
+    record-window present-mask, and Byzantine corruption rewrites a
+    fixed client subset's updates before they reach the aggregator.
+
     Returns the same shape of result as ``run_federated`` plus
     ``event_log`` (list of strings) and ``telemetry`` (utilization,
     staleness histogram, makespan)."""
+    # function-level import: events is imported by repro.fed before the
+    # fleet subpackage exists, and fleet.__init__ imports back into here
+    from repro.fed.fleet.faults import (FaultTrace, corrupt_update,
+                                        get_fault_profile)
     wall0 = _time.perf_counter()
     rng = np.random.default_rng(cfg.seed)
     params = (init_params if init_params is not None
@@ -140,13 +152,18 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
     eval_fn = make_eval_fn(model, test_data, eval_batch) if test_data else None
 
     n = len(specs)
+    profile = get_fault_profile(faults)
+    ftrace = (FaultTrace(profile, n, seed=cfg.seed)
+              if profile is not None and profile.any_faults() else None)
+    corruption = ftrace is not None and profile.has_corruption
+    fault_name = profile.name if profile is not None else "none"
     sizes = np.array([s.m for s in specs], np.float64)
     busy = np.zeros(n, bool)
     busy_time = np.zeros(n)
     tracei = DispatchTraceIndexer(n, trace)
     obs = active_recorder(verbose)
     obs.run_meta(runtime="async", engine="async", strategy=strategy.name,
-                 aggregator=aggregator.name, n_clients=n,
+                 aggregator=aggregator.name, faults=fault_name, n_clients=n,
                  max_updates=cfg.max_updates, concurrency=cfg.concurrency,
                  deadline=float(deadline), seed=cfg.seed)
     # cid -> (ClientResult | None, dispatch version, dispatch-time params,
@@ -217,14 +234,24 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
         round_span = obs.span_begin("round", round=len(history))
 
     n_dispatched = 0    # push-time count — the dispatch_limit gate
+    churn_logged = -1   # last record-window whose churn was counted
 
     def dispatch(t: float) -> bool:
-        nonlocal n_dispatched
+        nonlocal n_dispatched, churn_logged
         if n_dispatched >= dispatch_limit:
             return False
         p = sizes * ~busy
         if scheduler is not None:
             p = p * scheduler.eligible_mask()
+        if ftrace is not None and ftrace.profile.has_churn:
+            # churn evolves per record-window (the async "round")
+            mask, joins, leaves = ftrace.churn_step(len(history))
+            p = p * mask
+            if churn_logged != len(history):
+                churn_logged = len(history)
+                obs.metrics.counter("faults.churn_joins").inc(joins)
+                obs.metrics.counter("faults.churn_leaves").inc(leaves)
+                obs.metrics.gauge("faults.n_present").set(int(mask.sum()))
         total = p.sum()
         if total == 0.0:
             return False
@@ -270,12 +297,12 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
             # staleness anchors at *processing* time, when the params
             # snapshot is taken — ev.version (push time) can lag it when
             # another completion applied an update at the same timestamp
-            pending[ev.cid] = (res, version, params, work)
+            pending[ev.cid] = (res, version, params, work, k)
             queue.push(now + duration, COMPLETE, ev.cid, version, duration)
             continue
 
         # COMPLETE
-        res, v0, base_params, work = pending.pop(ev.cid)
+        res, v0, base_params, work, k_idx = pending.pop(ev.cid)
         busy[ev.cid] = False
         busy_time[ev.cid] += ev.duration
         obs.metrics.histogram("client_busy_s").observe(ev.duration)
@@ -285,6 +312,15 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
             dropped_total += 1
             rec_dropped += 1
             obs.metrics.counter("drops").inc()
+            rec_rows.append((ev.cid, float(ev.duration), True, False))
+        elif ftrace is not None and ftrace.dropped(ev.cid, k_idx):
+            # fault-injected mid-flight dropout: the client trained, the
+            # update is lost.  Its dispatch was already accounted (trace
+            # cursor, busy time, EWMA), so surviving clients' draws are
+            # byte-identical with the fault-free run.
+            dropped_total += 1
+            rec_dropped += 1
+            obs.metrics.counter("faults.dropped_updates").inc()
             rec_rows.append((ev.cid, float(ev.duration), True, False))
         else:
             violations_total += int(res.deadline_violated)
@@ -299,9 +335,17 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
             rec_coreset += int(res.used_coreset)
             rec_rows.append((ev.cid, float(ev.duration), False,
                              bool(res.deadline_violated)))
+            upd_params = res.params
+            if corruption:
+                # Byzantine clients rewrite their update relative to the
+                # dispatch-time snapshot; honest lanes pass untouched
+                upd_params, was_corrupt = corrupt_update(
+                    upd_params, base_params, ev.cid, k_idx, ftrace)
+                if was_corrupt:
+                    obs.metrics.counter("faults.corrupted_updates").inc()
             with obs.span("aggregate", cid=ev.cid):
                 new_params = aggregator.apply(
-                    params, ClientUpdate(params=res.params,
+                    params, ClientUpdate(params=upd_params,
                                          n_samples=res.n_samples,
                                          staleness=staleness,
                                          base_params=base_params))
@@ -376,6 +420,7 @@ def run_federated_async(model, clients_data: List[Dict[str, np.ndarray]],
         "deadline": deadline,
         "strategy": strategy.name,
         "aggregator": aggregator.name,
+        "faults": fault_name,
         "version": version,
         "event_log": event_log,
         "telemetry": telemetry,

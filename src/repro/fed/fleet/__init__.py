@@ -5,8 +5,18 @@ from repro.fed.fleet.async_engine import (  # noqa: F401
     DelayedGradientMerge,
     FedAsyncMerge,
     FedBuffMerge,
+    RobustMerge,
     as_merge_rule,
     run_async_fleet,
+)
+from repro.fed.fleet.faults import (  # noqa: F401
+    FAULT_PROFILES,
+    FaultProfile,
+    FaultTrace,
+    corrupt_stacked,
+    corrupt_update,
+    dirichlet_label_skew,
+    get_fault_profile,
 )
 from repro.fed.fleet.batched import (  # noqa: F401
     CohortGroup,

@@ -55,18 +55,25 @@ with those staleness values exactly.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time as _time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import (load_server_meta, load_server_state,
+                              save_server_state)
 from repro.fed.cost import resolve_cost
-from repro.fed.aggregators import (DelayedGradient, FedAsync, FedBuff,
-                                   polynomial_staleness)
-from repro.fed.events import COMPLETE, DISPATCH, EventQueue
+from repro.fed.aggregators import (ROBUST_METHODS, DelayedGradient, FedAsync,
+                                   FedBuff, RobustAggregate,
+                                   polynomial_staleness, robust_combine)
+from repro.fed.events import COMPLETE, DISPATCH, Event, EventQueue
 from repro.fed.fleet.batched import (FleetConfig, FleetEngine, _floor_pow4,
                                      make_cohort_groups, weighted_param_sum)
+from repro.fed.fleet.faults import (FaultTrace, corrupt_stacked,
+                                    get_fault_profile)
 from repro.fed.server import RoundRecord, make_eval_fn
 from repro.fed.simulator import (CapabilityTrace, ClientSpec,
                                  DispatchTraceIndexer, TraceConfig,
@@ -135,6 +142,7 @@ class AsyncMergeRule:
     never loops over clients host-side."""
     name = "base"
     use_base = False    # True: coefficients weight deltas from dispatch
+    robust = False      # True: flush goes through robust_combine instead
 
     def coefficients(self, staleness: np.ndarray, n_samples: np.ndarray
                      ) -> Tuple[np.ndarray, float]:
@@ -206,10 +214,43 @@ class DelayedGradientMerge(AsyncMergeRule):
         return c, 1.0
 
 
+class RobustMerge(AsyncMergeRule):
+    """Byzantine-robust flush: instead of the linear form, the buffered
+    client params are stacked and combined with one of the robust
+    estimators from ``repro.fed.aggregators`` (trimmed mean / median /
+    Krum / multi-Krum / norm-clip), then mixed into the global params
+    with ``server_lr``.  This is the async analogue of
+    ``RobustAggregate`` — the estimator sees one buffer flush the way
+    the sync rule sees one round."""
+    name = "robust"
+    robust = True
+
+    def __init__(self, method: str, server_lr: float = 1.0,
+                 weight_by_samples: bool = True, trim_frac: float = 0.1,
+                 n_byzantine: Optional[int] = None):
+        if method not in ROBUST_METHODS:
+            raise ValueError(f"unknown robust merge method {method!r} "
+                             f"(expected one of {sorted(ROBUST_METHODS)})")
+        if not 0.0 < server_lr <= 1.0:
+            raise ValueError(f"server_lr must be in (0, 1], got {server_lr}")
+        self.method = method
+        self.name = method
+        self.server_lr = server_lr
+        self.weight_by_samples = weight_by_samples
+        self.trim_frac = trim_frac
+        self.n_byzantine = n_byzantine
+
+    def coefficients(self, staleness, n_samples):
+        # never used on the robust path — zeros make any accidental
+        # linear evaluation a no-op that keeps the base params
+        return np.zeros(len(staleness), np.float64), 1.0
+
+
 ASYNC_MERGES = {
     "fedbuff": FedBuffMerge,
     "fedasync": FedAsyncMerge,
     "delayed_grad": DelayedGradientMerge,
+    **{m: functools.partial(RobustMerge, m) for m in ROBUST_METHODS},
 }
 
 
@@ -244,6 +285,11 @@ def as_merge_rule(aggregator) -> AsyncMergeRule:
         return DelayedGradientMerge(
             server_lr=aggregator.server_lr,
             staleness_exponent=aggregator.staleness_exponent)
+    if isinstance(aggregator, RobustAggregate):
+        return RobustMerge(aggregator.method,
+                           weight_by_samples=aggregator.weight_by_samples,
+                           trim_frac=aggregator.trim_frac,
+                           n_byzantine=aggregator.n_byzantine)
     raise TypeError(f"cannot derive an async merge rule from "
                     f"{type(aggregator).__name__}")
 
@@ -263,6 +309,7 @@ class _Buffered:
     work: float         # samples visited (analytic)
     duration: float     # realized virtual training time
     staleness: int      # version - v0 at arrival (== at merge; see module doc)
+    dispatch_ix: int = 0    # per-client dispatch ordinal (fault stream key)
 
 
 def run_async_fleet(model, clients_data: Sequence[Pytree],
@@ -270,7 +317,10 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
                     aggregator=None, scheduler=None,
                     test_data: Optional[Dict] = None, init_params=None,
                     engine: str = "batched", eval_batch: int = 512,
-                    engine_obj=None, verbose: bool = False) -> Dict[str, Any]:
+                    engine_obj=None, faults=None,
+                    checkpoint_dir: Optional[str] = None,
+                    checkpoint_every: int = 0, resume: bool = False,
+                    verbose: bool = False) -> Dict[str, Any]:
     """Drive the fleet group programs through the async event loop.
 
     ``engine`` selects the execution model for the per-flush group
@@ -280,6 +330,16 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
     data-parallel over the client mesh and each group's coefficient-
     weighted parameter sum arrives already psum-reduced).  On a
     one-device host ``"sharded"`` falls back to ``"batched"``.
+
+    ``faults`` injects seeded deterministic failure modes
+    (``repro.fed.fleet.faults``): dropout kills a completion *after* its
+    DISPATCH was accounted (the dispatch-trace cursor still advances, so
+    surviving clients' capability/jitter draws are unchanged), churn
+    masks the dispatch wave, and Byzantine corruption rewrites a fixed
+    client subset's updates before the merge.  ``checkpoint_dir`` +
+    ``checkpoint_every`` snapshot the full event-loop state every Nth
+    flush; ``resume=True`` restores the latest snapshot and continues
+    byte-identically with the uninterrupted run.
 
     Returns the ``run_federated_async`` result shape (params / history /
     event_log / telemetry) plus fleet accounting (group-program dispatch
@@ -319,6 +379,11 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
                                       cost)
     trace = CapabilityTrace(cfg.trace) if cfg.trace is not None else None
     eval_fn = make_eval_fn(model, test_data, eval_batch) if test_data else None
+    profile = get_fault_profile(faults)
+    ftrace = (FaultTrace(profile, n, seed=cfg.seed)
+              if profile is not None and profile.any_faults() else None)
+    corruption = ftrace is not None and profile.has_corruption
+    fault_name = profile.name if profile is not None else "none"
 
     # a buffer larger than the in-flight cap could never fill; clamp both
     # to the fleet size so tiny fleets still make progress
@@ -332,7 +397,8 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
     obs = active_recorder(verbose)
     obs.run_meta(runtime="async_fleet", engine=mode,
                  requested_engine=engine, aggregator=rule.name,
-                 n_clients=n, max_updates=cfg.max_updates,
+                 faults=fault_name, n_clients=n,
+                 max_updates=cfg.max_updates,
                  buffer_k=buffer_k, concurrency=concurrency,
                  deadline=float(deadline), seed=cfg.seed,
                  n_devices=len(jax.devices()))
@@ -355,25 +421,38 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
     merged_total = 0
     violations_total = 0
     partial_flushes = 0
+    dropped_total = 0       # fault-dropped completions (update lost)
+    corrupted_total = 0     # Byzantine-rewritten lanes merged
+    rec_dropped = 0         # drops inside the current flush window
     rec_start = 0.0
     rec_wall0 = _time.perf_counter()
     # like repro.fed.events: the "round" is a flush-to-flush record
     # window, so round/buffer_fill spans open and close at window
     # boundaries rather than around a lexical block
-    round_span = obs.span_begin("round", round=0)
+    round_span = None
+    fill_span = None
 
     def dispatch_wave(t: float) -> int:
         """Refill free slots with one weighted no-replacement draw.
 
         Waves run only at t=0 and after a flush (never per-completion),
         so a client can hold at most one spot per buffer and the wave is
-        one ``rng.choice`` regardless of fleet size."""
+        one ``rng.choice`` regardless of fleet size.  Under churn, the
+        present-mask at the current server version zeroes absent
+        clients' sampling weight — identical to the sync fleet's
+        cohort-filter semantics, indexed by flush instead of round."""
         free = concurrency - int(busy.sum())
         if free <= 0:
             return 0
         p = sizes * ~busy
         if scheduler is not None:
             p = p * scheduler.eligible_mask()
+        if ftrace is not None and ftrace.profile.has_churn:
+            mask, joins, leaves = ftrace.churn_step(version)
+            p = p * mask
+            obs.metrics.counter("faults.churn_joins").inc(joins)
+            obs.metrics.counter("faults.churn_leaves").inc(leaves)
+            obs.metrics.gauge("faults.n_present").set(int(mask.sum()))
         total = p.sum()
         if total <= 0.0:
             return 0
@@ -392,13 +471,19 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
         the rule's linear form.  ``partial=True`` marks a final drain of
         an under-filled buffer (tail updates are merged, not dropped)."""
         nonlocal params, version, applied, merged_total, violations_total
-        nonlocal partial_flushes, rec_start, rec_wall0, round_span, fill_span
+        nonlocal partial_flushes, corrupted_total, rec_dropped
+        nonlocal rec_start, rec_wall0, round_span, fill_span
         obs.span_end(fill_span)
         buf, buffer[:] = list(buffer), []
         stal = np.array([e.staleness for e in buf], np.int64)
         msz = np.array([e.m for e in buf], np.int64)
         c, c_w = rule.coefficients(stal, msz)
         coef = {e.cid: float(ci) for e, ci in zip(buf, c)}
+        # robust rules and Byzantine corruption need the per-client
+        # parameter stacks; the linear rules only need the weighted sums
+        use_stack = rule.robust or corruption
+        dix = {e.cid: e.dispatch_ix for e in buf}
+        msz_by_cid = {e.cid: e.m for e in buf}
 
         # group by dispatch snapshot, then by (M, k) shape within it —
         # every client trains from the params it was actually handed
@@ -420,6 +505,8 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
         # weighted parameter sum (psum-reduced on the sharded mesh, one
         # tensordot on the batched path) — no host-side client loop
         acc = None
+        stack_parts = []        # (per-client stack, cids) — robust path
+        n_corrupted = 0
         losses_by_cid: Dict[int, float] = {}
         loss_parts = []
         with obs.span("dispatch", n_clients=len(buf),
@@ -429,18 +516,54 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
                 for g in groups:
                     w = np.array([coef[int(cid)] for cid in g.cids],
                                  np.float64)
+                    part = None
                     if mode == "sharded":
-                        part, _, losses, _ = eng.run_group_sharded(base, g, w)
+                        part, _, losses, _, p = eng.run_group_sharded(
+                            base, g, w)
                     else:
                         p, losses, _ = eng.run_group(
                             params=base, group=g,
                             batched=(mode == "batched"))
+                    if use_stack:
+                        if corruption:
+                            ords = np.array(
+                                [dix[int(cid)] for cid in g.cids], np.int64)
+                            p, nc = corrupt_stacked(p, base, g.cids, ords,
+                                                    ftrace)
+                            n_corrupted += nc
+                        if rule.robust:
+                            part = None
+                            stack_parts.append((p, np.asarray(g.cids)))
+                        else:       # linear rule over corrupted lanes
+                            part = weighted_param_sum(p, w)
+                    elif part is None:
                         part = weighted_param_sum(p, w)
-                    acc = part if acc is None else tree_add(acc, part)
+                    if part is not None:
+                        acc = part if acc is None else tree_add(acc, part)
                     loss_parts.append((g.cids, losses))
         with obs.span("aggregate", n_clients=len(buf), n_versions=len(by_v0),
                       partial=partial):
-            if rule.use_base:   # w + sum c_i w_i - sum_{v} (sum_i c_i) base_v
+            if rule.robust:
+                # concatenate the group stacks (deterministic group
+                # order) and hand the full flush to the estimator
+                stacked, cid_order = stack_parts[0]
+                cid_order = [cid_order]
+                for p2, cids2 in stack_parts[1:]:
+                    stacked = jax.tree.map(
+                        lambda a, b: jnp.concatenate([a, b]), stacked, p2)
+                    cid_order.append(cids2)
+                order = np.concatenate(cid_order)
+                wts = (np.array([msz_by_cid[int(i)] for i in order],
+                                np.float64)
+                       if rule.weight_by_samples else None)
+                combined = robust_combine(
+                    stacked, rule.method, weights=wts, base=params,
+                    trim_frac=rule.trim_frac, n_byzantine=rule.n_byzantine)
+                lr = rule.server_lr
+                new = (combined if lr >= 1.0 else
+                       tree_add(tree_scale(params, 1.0 - lr),
+                                tree_scale(combined, lr)))
+            elif rule.use_base:   # w + sum c_i w_i - sum_v (sum_i c_i) base_v
                 new = tree_add(params, acc)
                 for v0, _ in grouped:
                     bsum = float(sum(coef[e.cid] for e in by_v0[v0]))
@@ -451,6 +574,9 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
             else:
                 new = tree_add(tree_scale(params, c_w), acc)
             params = new
+        corrupted_total += n_corrupted
+        if n_corrupted:
+            obs.metrics.counter("faults.corrupted_updates").inc(n_corrupted)
         with obs.span("gather", n_clients=len(buf)):
             # materializing here blocks on the (lazily dispatched) group
             # programs, so the wall time lands in an accounted phase
@@ -482,7 +608,7 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
         rec = RoundRecord(
             round=len(history), sim_round_time=t - rec_start,
             client_times=[float(e.duration) for e in buf],
-            n_participants=len(buf), n_dropped=0,
+            n_participants=len(buf), n_dropped=rec_dropped,
             n_coreset=sum(e.k > 0 for e in buf),
             train_loss=train_loss, n_violations=n_viol)
         if eval_fn and (len(history) % cfg.eval_every == 0
@@ -493,7 +619,8 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
         obs.span_end(round_span)
         obs.event("round", runtime="async_fleet", engine=mode,
                   label=f"async_fleet/{rule.name}", round=rec.round,
-                  n_participants=rec.n_participants, n_dropped=0,
+                  n_participants=rec.n_participants, n_dropped=rec_dropped,
+                  n_corrupted=n_corrupted,
                   n_coreset=rec.n_coreset, n_violations=n_viol,
                   sim_round_time=float(rec.sim_round_time),
                   wall_time_s=_time.perf_counter() - rec_wall0,
@@ -510,6 +637,13 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
                             for e in buf])
         rec_start = t
         rec_wall0 = _time.perf_counter()
+        rec_dropped = 0
+        # snapshot *between* windows: the flush is fully accounted and
+        # the continuation wave has not fired yet, so a resumed run
+        # replays the wave + next window byte-identically
+        if (checkpoint_dir is not None and checkpoint_every > 0
+                and not partial and applied % checkpoint_every == 0):
+            save_checkpoint(t)
         if applied < cfg.max_updates and not partial:
             # the run continues: open the next flush window
             round_span = obs.span_begin("round", round=len(history))
@@ -520,9 +654,99 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
             # terminal flush — no trailing sliver of a window
             round_span = fill_span = None
 
-    fill_span = obs.span_begin("buffer_fill", round=0)
-    with obs.span("dispatch_wave", round=0):
-        dispatch_wave(0.0)
+    def save_checkpoint(t: float) -> None:
+        """Snapshot the complete event-loop state.
+
+        Params plus every pinned dispatch snapshot go into one npz
+        pytree; the virtual clock (queue heap + push sequence), pending
+        and buffered contributions, logs, counters, RNG bit-generator
+        state, and scheduler state go into the JSON meta sidecar — a
+        resumed run replays the continuation wave and every later event
+        byte-identically with the uninterrupted run."""
+        with obs.span("checkpoint", round=len(history)):
+            tree = {"params": params,
+                    "versions": {str(v): slot[0]
+                                 for v, slot in params_by_version.items()}}
+            meta = {
+                "kind": "async_fleet",
+                "version": version, "applied": applied, "now": float(t),
+                "merged_total": merged_total,
+                "violations_total": violations_total,
+                "partial_flushes": partial_flushes,
+                "dropped_total": dropped_total,
+                "corrupted_total": corrupted_total,
+                "rec_start": float(rec_start),
+                "seq": int(queue._seq),
+                "heap": [[float(ht), int(hs), he.kind, int(he.cid),
+                          int(he.version), float(he.duration)]
+                         for ht, hs, he in queue._heap],
+                "event_log": list(event_log),
+                "history": [dataclasses.asdict(r) for r in history],
+                "staleness_log": [int(x) for x in staleness_log],
+                "occupancy_log": [int(x) for x in occupancy_log],
+                "busy": busy.tolist(),
+                "busy_time": busy_time.tolist(),
+                "pending": {str(cid): dataclasses.asdict(e)
+                            for cid, e in pending.items()},
+                "buffer": [dataclasses.asdict(e) for e in buffer],
+                "refcounts": {str(v): int(slot[1])
+                              for v, slot in params_by_version.items()},
+                "dispatch_counts": tracei.counts.tolist(),
+                "rng_state": rng.bit_generator.state,
+            }
+            if scheduler is not None and hasattr(scheduler, "state_dict"):
+                meta["scheduler"] = scheduler.state_dict()
+            save_server_state(checkpoint_dir, applied, tree, extra=meta)
+
+    if resume and checkpoint_dir is not None:
+        tree, _ = load_server_state(checkpoint_dir)
+        meta = load_server_meta(checkpoint_dir)
+        if tree is not None and meta is not None \
+                and meta.get("kind") == "async_fleet":
+            params = tree["params"]
+            refc = meta["refcounts"]
+            params_by_version = {int(v): [pv, int(refc[v])]
+                                 for v, pv in tree["versions"].items()}
+            version = int(meta["version"])
+            applied = int(meta["applied"])
+            now = float(meta["now"])
+            merged_total = int(meta["merged_total"])
+            violations_total = int(meta["violations_total"])
+            partial_flushes = int(meta["partial_flushes"])
+            dropped_total = int(meta["dropped_total"])
+            corrupted_total = int(meta["corrupted_total"])
+            rec_start = float(meta["rec_start"])
+            event_log[:] = [str(s) for s in meta["event_log"]]
+            history[:] = [RoundRecord(**h) for h in meta["history"]]
+            staleness_log[:] = [int(x) for x in meta["staleness_log"]]
+            occupancy_log[:] = [int(x) for x in meta["occupancy_log"]]
+            busy[:] = np.asarray(meta["busy"], bool)
+            busy_time[:] = np.asarray(meta["busy_time"], np.float64)
+            pending.clear()
+            pending.update({int(k): _Buffered(**v)
+                            for k, v in meta["pending"].items()})
+            buffer[:] = [_Buffered(**v) for v in meta["buffer"]]
+            # the saved heap list already satisfies the heap invariant
+            queue._heap[:] = [
+                (ht, hs, Event(ht, hs, kind, int(cid), int(ver), dur))
+                for ht, hs, kind, cid, ver, dur in meta["heap"]]
+            queue._seq = int(meta["seq"])
+            tracei.counts[:] = np.asarray(meta["dispatch_counts"], np.int64)
+            rng.bit_generator.state = meta["rng_state"]
+            if (scheduler is not None and "scheduler" in meta
+                    and hasattr(scheduler, "load_state_dict")):
+                scheduler.load_state_dict(meta["scheduler"])
+            obs.event("resume", runtime="async_fleet", round=len(history),
+                      applied=applied, checkpoint_dir=str(checkpoint_dir))
+
+    # open the first flush window.  On a fresh start this is round 0 at
+    # t=0; on resume it replays exactly the continuation ``merge_buffer``
+    # would have run after the checkpointed flush (same wave, same RNG
+    # draw, same event sequence numbers).
+    round_span = obs.span_begin("round", round=len(history))
+    with obs.span("dispatch_wave", round=len(history)):
+        dispatch_wave(now)
+    fill_span = obs.span_begin("buffer_fill", round=len(history))
     unprocessed = []    # events past a max_virtual_time cutoff
 
     while len(queue) and applied < cfg.max_updates:
@@ -556,7 +780,8 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
                                                                   k_idx)
             pending[ev.cid] = _Buffered(
                 cid=ev.cid, v0=ev.version, budget=b, k=kq, m=spec.m,
-                work=work, duration=duration, staleness=0)
+                work=work, duration=duration, staleness=0,
+                dispatch_ix=k_idx)
             queue.push(now + duration, COMPLETE, ev.cid, ev.version,
                        duration)
             continue
@@ -569,6 +794,19 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
         if scheduler is not None:
             scheduler.observe(ev.cid, float(cost.work_units(e.work)),
                               ev.duration)
+        if ftrace is not None and ftrace.dropped(ev.cid, e.dispatch_ix):
+            # mid-round dropout: the client trained, but its update is
+            # lost in flight.  Its dispatch was already fully accounted
+            # (trace cursor, busy time, capability EWMA), so surviving
+            # clients' capability/jitter draws are byte-identical with
+            # the fault-free run — only the merge never sees this one.
+            rec_dropped += 1
+            dropped_total += 1
+            obs.metrics.counter("faults.dropped_updates").inc()
+            params_by_version[e.v0][1] -= 1     # ref will never merge
+            if params_by_version[e.v0][1] <= 0:
+                del params_by_version[e.v0]
+            continue
         e.staleness = version - e.v0
         staleness_log.append(e.staleness)
         obs.metrics.histogram("staleness", exact=True).observe(e.staleness)
@@ -620,6 +858,8 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
         "n_merged_clients": merged_total,
         "n_partial_flushes": partial_flushes,
         "n_violations": violations_total,
+        "n_dropped_updates": dropped_total,
+        "n_corrupted_updates": corrupted_total,
         "wall_time": _time.perf_counter() - wall0,
     }
     if obs.enabled:
@@ -639,6 +879,7 @@ def run_async_fleet(model, clients_data: Sequence[Pytree],
         "engine": engine,           # requested
         "engine_mode": mode,        # executed (sharded may fall back)
         "aggregator": rule.name,
+        "faults": fault_name,
         "version": version,
         "applied": applied,
         "event_log": event_log,

@@ -44,8 +44,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import (load_server_meta, load_server_state,
+                              save_server_state)
 from repro.core.coreset import build_coreset_batched
+from repro.fed.aggregators import ROBUST_METHODS, robust_combine
 from repro.fed.cost import resolve_cost
+from repro.fed.fleet.faults import (FaultTrace, corrupt_stacked,
+                                    get_fault_profile)
 from repro.fed.fleet.workloads import client_num_samples
 from repro.fed.server import RoundRecord, make_eval_fn
 from repro.fed.simulator import (CapabilityTrace, ClientSpec,
@@ -76,6 +81,11 @@ class FleetConfig:
     # (`_floor_pow4`) is unchanged — cost rescales what a budget *is*,
     # not how budgets map to cohort groups.
     cost: Any = None
+    # server combine rule: "weighted_mean" (the FedAvg default) or one of
+    # repro.fed.aggregators.ROBUST_METHODS (trimmed_mean / median / krum /
+    # multi_krum / norm_clip) — the Byzantine-resilient rules fed by the
+    # engines' per-client parameter stacks
+    aggregator: str = "weighted_mean"
 
 
 @dataclasses.dataclass
@@ -106,7 +116,12 @@ class CohortGroup:
 
 @dataclasses.dataclass
 class FleetRoundStats:
-    """Per-client outcome of one fleet round, in cohort order."""
+    """Per-client outcome of one fleet round, in cohort order.
+
+    Dropped clients *stay in the stats* (their dispatch happened; only
+    the update was lost), so trace accounting and scheduler observations
+    remain aligned per-(client, dispatch) under fault injection — the
+    ``dropped`` mask is what excluded them from aggregation."""
     cids: np.ndarray              # (N,)
     m: np.ndarray                 # (N,)
     budgets: np.ndarray           # (N,) effective budget (m if full-set)
@@ -114,6 +129,8 @@ class FleetRoundStats:
     work: np.ndarray              # (N,) work units (samples visited)
     losses: np.ndarray            # (N,) final local train loss
     medoids: Dict[int, np.ndarray]  # cid -> (k,) selected sample indices
+    dropped: np.ndarray = None    # (N,) bool — update lost mid-round
+    corrupted: np.ndarray = None  # (N,) bool — Byzantine update merged
 
 
 def _next_pow2(n: int) -> int:
@@ -626,7 +643,10 @@ def run_fleet_round(engine: FleetEngine, params: Pytree,
                     cids: Sequence[int], budgets: Dict[int, int],
                     round_seed: int = 0, batched: bool = True,
                     groups: Optional[List[CohortGroup]] = None,
-                    mode: Optional[str] = None
+                    mode: Optional[str] = None,
+                    aggregator: str = "weighted_mean",
+                    faults: Optional[FaultTrace] = None,
+                    dispatch_ordinals: Optional[Dict[int, int]] = None
                     ) -> Tuple[Pytree, FleetRoundStats]:
     """Execute one cohort round; returns (aggregated params, stats).
 
@@ -638,31 +658,67 @@ def run_fleet_round(engine: FleetEngine, params: Pytree,
     ``batched`` flag.  An empty cohort yields the round-start params and
     zero-length stats.  ``groups`` lets callers reuse a prebuilt cohort
     grouping (it is a pure function of (clients_data, cids, budgets, cfg,
-    round_seed))."""
+    round_seed)).
+
+    ``aggregator`` selects the server combine rule ("weighted_mean" or a
+    robust method — the robust rules consume the engines' per-client
+    parameter stacks).  ``faults`` injects mid-round dropout (the update
+    is computed, then its aggregation weight is zeroed / its lane is
+    excluded) and Byzantine corruption of the stack lanes;
+    ``dispatch_ordinals`` maps cid → that client's dispatch ordinal for
+    the per-(client, dispatch) fault draws (defaults to 0 — drivers pass
+    the ``DispatchTraceIndexer`` cursors)."""
     cfg = engine.cfg
     obs = get_recorder()
     if mode is None:
         mode = "batched" if batched else "loop"
     if mode not in ("batched", "loop", "sharded"):
         raise ValueError(f"unknown fleet execution mode {mode!r}")
+    if aggregator != "weighted_mean" and aggregator not in ROBUST_METHODS:
+        raise ValueError(f"unknown fleet aggregator {aggregator!r} "
+                         f"(expected weighted_mean or one of "
+                         f"{ROBUST_METHODS})")
     if groups is None:
         with obs.span("cohort_build", n_clients=len(cids)):
             groups = make_cohort_groups(clients_data, cids, budgets, cfg,
                                         round_seed)
+    has_dropout = faults is not None and faults.profile.has_dropout
+    has_corruption = faults is not None and faults.profile.has_corruption
+    # the weighted-mean-of-honest-lanes path never materializes stacks
+    # (sharded keeps its psum); robust rules and corruption need them
+    needs_stack = aggregator != "weighted_mean" or has_corruption
+    ordinals = dispatch_ordinals or {}
     partials = []
+    stacks: List[Tuple[Pytree, np.ndarray, np.ndarray]] = []
     all_cids, all_m, all_b, all_core, all_work, all_loss, all_meds = \
         [], [], [], [], [], [], []
+    all_drop, all_corrupt = [], []
     medoids: Dict[int, np.ndarray] = {}
     for g in groups:
         w = (g.m.astype(np.float64) if cfg.weight_by_samples
              else np.ones(g.n_clients))
+        ords = np.array([ordinals.get(int(c), 0) for c in g.cids], np.int64)
+        drop = (np.array([faults.dropped(int(c), int(o))
+                          for c, o in zip(g.cids, ords)], bool)
+                if has_dropout else np.zeros(g.n_clients, bool))
+        w_eff = np.where(drop, 0.0, w)
         if mode == "sharded":
-            part, wsum, losses, meds = engine.run_group_sharded(params, g, w)
-            partials.append((part, wsum))
+            part, wsum, losses, meds, stack = engine.run_group_sharded(
+                params, g, w_eff)
+            if not needs_stack:
+                partials.append((part, wsum))
         else:
-            p, losses, meds = engine.run_group(params, g,
-                                               batched=(mode == "batched"))
-            partials.append((p, w))
+            stack, losses, meds = engine.run_group(
+                params, g, batched=(mode == "batched"))
+            if not needs_stack:
+                partials.append((stack, w_eff))
+        corrupt = np.zeros(g.n_clients, bool)
+        if needs_stack:
+            if has_corruption:
+                stack, _ = corrupt_stacked(stack, params, g.cids, ords,
+                                           faults)
+                corrupt = faults.byzantine[np.asarray(g.cids, np.int64)]
+            stacks.append((stack, w_eff, drop))
         all_cids.append(g.cids)
         all_m.append(g.m)
         eff_b = g.m if g.k == 0 else np.full(g.n_clients, g.k)
@@ -674,12 +730,33 @@ def run_fleet_round(engine: FleetEngine, params: Pytree,
         all_work.append(work)
         all_loss.append(losses)     # device arrays stay lazy until after
         all_meds.append(meds)       # every group has been dispatched
-    with obs.span("aggregate", n_groups=len(groups)):
+        all_drop.append(drop)
+        all_corrupt.append(corrupt & ~drop)   # a lost update corrupts nothing
+    with obs.span("aggregate", n_groups=len(groups),
+                  aggregator=aggregator):
         if obs.enabled:             # bytes entering the reduction
+            src = partials if not needs_stack else stacks
             obs.metrics.counter("aggregate.bytes").inc(sum(
-                int(leaf.nbytes) for part, _ in partials
-                for leaf in jax.tree.leaves(part)))
-        if mode == "sharded":
+                int(leaf.nbytes) for entry in src
+                for leaf in jax.tree.leaves(entry[0])))
+        if needs_stack:
+            trees, wlist = [], []
+            for stack, w_eff, drop in stacks:
+                keep = np.nonzero(~drop)[0]
+                if keep.size == 0:
+                    continue
+                trees.append(jax.tree.map(
+                    lambda x: jnp.asarray(x)[keep], stack))
+                wlist.append(np.asarray(w_eff, np.float64)[keep])
+            if not trees:
+                new_params = params
+            else:
+                stacked_all = (trees[0] if len(trees) == 1 else jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs), *trees))
+                new_params = robust_combine(stacked_all, aggregator,
+                                            weights=np.concatenate(wlist),
+                                            base=params)
+        elif mode == "sharded":
             new_params = engine.combine_group_sums(partials, fallback=params)
         else:
             new_params = _aggregate_groups(partials, fallback=params)
@@ -695,7 +772,8 @@ def run_fleet_round(engine: FleetEngine, params: Pytree,
         budgets=_cat(all_b, np.int64),
         used_coreset=_cat(all_core, bool),
         work=_cat(all_work, np.float64),
-        losses=_cat(all_loss, np.float64), medoids=medoids)
+        losses=_cat(all_loss, np.float64), medoids=medoids,
+        dropped=_cat(all_drop, bool), corrupted=_cat(all_corrupt, bool))
     return new_params, stats
 
 
@@ -706,6 +784,8 @@ def run_fleet(model, clients_data: Sequence[Pytree],
               straggler_pct: float = 30.0,
               test_data: Optional[Dict] = None, init_params=None,
               engine: str = "batched", eval_every: int = 1,
+              faults=None, checkpoint_dir: Optional[str] = None,
+              checkpoint_every: int = 0, resume: bool = False,
               verbose: bool = False) -> Dict[str, Any]:
     """Multi-round fleet driver: adaptive cohorts + batched execution.
 
@@ -729,6 +809,20 @@ def run_fleet(model, clients_data: Sequence[Pytree],
     carries its own dispatch counter, so a client absent for some rounds
     samples exactly the entries the sync server and async event loop
     would sample for the same dispatch order.
+
+    ``faults`` (a ``repro.fed.fleet.faults`` profile name / FaultProfile
+    / None) injects dropout, churn, and Byzantine corruption as seeded
+    deterministic axes; ``cfg.aggregator`` picks the (robust) combine
+    rule.  Dropped clients stay in the round's trace accounting — their
+    dispatch happened, only the update was lost — so fault injection
+    never shifts another client's per-(client, dispatch) draws.
+
+    ``checkpoint_dir`` + ``checkpoint_every`` save server state (params,
+    round index, scheduler EWMA + RNG state, dispatch cursors, history)
+    every N rounds via ``repro.checkpoint``; ``resume=True`` restores
+    the latest checkpoint and continues **byte-identically** with the
+    uninterrupted run — everything else (capability trace, fault draws,
+    cohort grouping) is a pure function of the seed and regenerates.
     """
     if engine not in ("batched", "loop", "sharded"):
         raise ValueError(f"unknown fleet engine {engine!r} "
@@ -753,27 +847,76 @@ def run_fleet(model, clients_data: Sequence[Pytree],
     # per-client dispatch cursors: the CapabilityTrace is defined per
     # (client, dispatch), exactly like repro.fed.server / repro.fed.events
     tracei = DispatchTraceIndexer(len(specs), cap_trace)
+    profile = get_fault_profile(faults)
+    ftrace = (FaultTrace(profile, len(specs), seed=cfg.seed)
+              if profile is not None and profile.any_faults() else None)
     obs = active_recorder(verbose)
     obs.run_meta(runtime="fleet", engine=mode, requested_engine=engine,
                  n_clients=len(specs), rounds=rounds,
                  deadline=float(deadline), seed=cfg.seed,
+                 aggregator=cfg.aggregator,
+                 faults=(profile.name if profile is not None else "none"),
                  n_devices=len(jax.devices()))
 
     history: List[RoundRecord] = []
     cohort_sizes: List[int] = []
-    for r in range(rounds):
+    start_round = 0
+    if resume and checkpoint_dir is not None:
+        ck_params, ck_round = load_server_state(checkpoint_dir, like=params)
+        if ck_params is not None and ck_round >= 0:
+            meta = load_server_meta(checkpoint_dir) or {}
+            params = ck_params
+            start_round = ck_round + 1
+            history = [RoundRecord(**h) for h in meta.get("history", [])]
+            cohort_sizes = [int(c) for c in meta.get("cohort_sizes", [])]
+            if "dispatch_counts" in meta:
+                tracei.counts[:] = np.asarray(meta["dispatch_counts"],
+                                              np.int64)
+            if scheduler is not None and meta.get("scheduler") is not None \
+                    and hasattr(scheduler, "load_state_dict"):
+                scheduler.load_state_dict(meta["scheduler"])
+            obs.event("resume", round=start_round,
+                      checkpoint_dir=checkpoint_dir)
+    for r in range(start_round, rounds):
         t0 = time.perf_counter()
         rspan = obs.span_begin("round", round=r)
         with obs.span("cohort_select", round=r):
             if scheduler is not None:
                 cohort = [int(c) for c in scheduler.select()]
+            else:
+                cohort = list(range(len(specs)))
+            if ftrace is not None and ftrace.profile.has_churn:
+                mask, joins, leaves = ftrace.churn_step(r)
+                cohort = [cid for cid in cohort if mask[cid]]
+                if obs.enabled:
+                    obs.metrics.counter("faults.churn_joins").inc(joins)
+                    obs.metrics.counter("faults.churn_leaves").inc(leaves)
+                    obs.metrics.gauge("faults.n_present").set(
+                        int(mask.sum()))
+                    obs.metrics.gauge("faults.participation_frac").set(
+                        len(cohort) / max(len(specs), 1))
+            if scheduler is not None:
                 budgets = {cid: scheduler.budget(cid, deadline, cfg.epochs)
                            for cid in cohort}
             else:
-                cohort = list(range(len(specs)))
                 budgets = nominal_budgets(specs, deadline, cfg.epochs, cost)
+        # fault draws key on each client's dispatch ordinal — snapshot
+        # the cursors before trace_account advances them below
+        ordinals = {int(c): int(tracei.counts[c]) for c in cohort}
         params, stats = run_fleet_round(eng, params, clients_data, cohort,
-                                        budgets, round_seed=r, mode=mode)
+                                        budgets, round_seed=r, mode=mode,
+                                        aggregator=cfg.aggregator,
+                                        faults=ftrace,
+                                        dispatch_ordinals=ordinals)
+        n_fault_dropped = int(stats.dropped.sum())
+        n_corrupted = int(stats.corrupted.sum())
+        if obs.enabled and ftrace is not None:
+            if n_fault_dropped:
+                obs.metrics.counter("faults.dropped_updates").inc(
+                    n_fault_dropped)
+            if n_corrupted:
+                obs.metrics.counter("faults.corrupted_updates").inc(
+                    n_corrupted)
         durations = []
         with obs.span("trace_account", round=r):
             for cid, work in zip(stats.cids, stats.work):
@@ -801,7 +944,7 @@ def run_fleet(model, clients_data: Sequence[Pytree],
             round=r,
             sim_round_time=float(np.max(durations)) if durations else 0.0,
             client_times=[float(d) for d in durations],
-            n_participants=len(cohort), n_dropped=0,
+            n_participants=len(cohort), n_dropped=n_fault_dropped,
             n_coreset=int(stats.used_coreset.sum()), train_loss=train_loss,
             n_violations=n_violations)
         if eval_fn and (r % eval_every == 0 or r == rounds - 1):
@@ -812,7 +955,8 @@ def run_fleet(model, clients_data: Sequence[Pytree],
         obs.span_end(rspan)
         obs.event("round", runtime="fleet", engine=mode,
                   label=f"fleet/{mode}", round=r,
-                  n_participants=len(cohort), n_dropped=0,
+                  n_participants=len(cohort), n_dropped=n_fault_dropped,
+                  n_corrupted=n_corrupted,
                   n_coreset=rec.n_coreset, n_violations=n_violations,
                   sim_round_time=float(rec.sim_round_time),
                   wall_time_s=time.perf_counter() - t0,
@@ -824,6 +968,19 @@ def run_fleet(model, clients_data: Sequence[Pytree],
                   durations=[float(d) for d in durations],
                   violated=[bool(d > deadline * (1.0 + 1e-9))
                             for d in durations])
+        if checkpoint_dir is not None and checkpoint_every > 0 \
+                and (r + 1) % checkpoint_every == 0:
+            with obs.span("checkpoint", round=r):
+                extra = {
+                    "kind": "fleet",
+                    "history": [dataclasses.asdict(h) for h in history],
+                    "cohort_sizes": cohort_sizes,
+                    "dispatch_counts": tracei.counts.tolist(),
+                }
+                if scheduler is not None and hasattr(scheduler,
+                                                     "state_dict"):
+                    extra["scheduler"] = scheduler.state_dict()
+                save_server_state(checkpoint_dir, r, params, extra=extra)
 
     return {
         "params": params,
@@ -833,5 +990,7 @@ def run_fleet(model, clients_data: Sequence[Pytree],
         "engine_mode": mode,       # executed (sharded may fall back)
         "n_devices": len(jax.devices()),
         "cohort_sizes": cohort_sizes,
+        "aggregator": cfg.aggregator,
+        "faults": profile.name if profile is not None else "none",
         "strategy": "fedcore_fleet",
     }

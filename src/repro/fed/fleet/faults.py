@@ -1,0 +1,371 @@
+"""Seeded, deterministic fault injection for fleet-scale FL.
+
+A million-user fleet fails in more ways than slowness (the only axis the
+scenario registry models): clients drop mid-round, join and leave
+between rounds, send noisy or adversarial updates, and hold
+label-skewed non-IID data.  "Learning from Straggler Clients" (Hard et
+al., 2024) and the FL survey (Collins & Wang) both name partial
+participation, update corruption, and non-IID skew as the failure axes
+a production FL system must survive.  This module makes each of them an
+orthogonal, composable axis that any capability scenario can be crossed
+with:
+
+  * **mid-round dropout** — the client completes its dispatch (the
+    work happens, the capability-trace entry is consumed, the scheduler
+    observes the duration) but the *update* is lost with probability p
+    before it reaches the server;
+  * **join/leave churn** — per-round Bernoulli arrival/departure over
+    the whole client universe (a two-state Markov chain per client), so
+    the active set is a moving subset of a larger population;
+  * **update corruption** — a fixed Byzantine subset of clients sends
+    Gaussian-noised, sign-flipped, or scaled/boosted models every time
+    it participates (the classic attack models Krum / trimmed-mean
+    aggregation defends against);
+  * **label-skew partitioning** — ``dirichlet_label_skew`` resamples a
+    federated dataset so each client's label distribution follows a
+    Dirichlet(α) draw, the standard non-IID benchmark construction.
+    This axis transforms the *dataset* before a run (``run_scenario``
+    applies it); the runtime axes above act per dispatch/round.
+
+Every axis is a pure function of ``(seed, profile, cid, index)``:
+dropout draws come from per-client streams indexed by the client's own
+dispatch ordinal (the ``DispatchTraceIndexer`` contract), churn masks
+from per-round streams, Byzantine membership from one draw at
+construction — so fault-injected runs replay byte-identically, compose
+with checkpoint/resume, and never perturb the capability-trace draws of
+the surviving clients.
+
+Fault events surface through ``repro.obs``: counters
+``faults.dropped_updates`` / ``faults.corrupted_updates`` /
+``faults.churn_joins`` / ``faults.churn_leaves`` and per-round gauges
+``faults.n_present`` / ``faults.participation_frac``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+# stream tags: disjoint SeedSequence lanes per fault axis, so axes are
+# independent and adding one never shifts another's draws
+_TAG_BYZANTINE = 0xB1
+_TAG_DROPOUT = 0xD0
+_TAG_CHURN = 0xC4
+_TAG_NOISE = 0x6E
+_TAG_SKEW = 0x5C
+
+CORRUPT_MODES = ("none", "gaussian", "sign_flip", "scaled")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultProfile:
+    """One named combination of fault axes (all default off)."""
+    name: str = "none"
+    description: str = ""
+    # P(update lost | dispatch completed) — per (client, dispatch)
+    dropout_prob: float = 0.0
+    # per-round churn Markov chain over the client universe
+    leave_prob: float = 0.0       # P(present -> absent) per round
+    join_prob: float = 0.0        # P(absent -> present) per round
+    initial_present_frac: float = 1.0   # universe fraction present at t=0
+    # Byzantine update corruption (fixed client subset)
+    corrupt_mode: str = "none"    # none | gaussian | sign_flip | scaled
+    corrupt_frac: float = 0.0     # fraction of Byzantine clients
+    noise_std: float = 0.5        # gaussian: additive N(0, std^2) per weight
+    scale_factor: float = 10.0    # scaled: delta boosted by this factor
+    # non-IID label skew (data-prep axis; None = leave the data as built)
+    label_skew_alpha: Optional[float] = None
+    seed: int = 0                 # profile salt, mixed with the run seed
+
+    def __post_init__(self):
+        if self.corrupt_mode not in CORRUPT_MODES:
+            raise ValueError(f"unknown corrupt_mode {self.corrupt_mode!r} "
+                             f"(expected one of {CORRUPT_MODES})")
+
+    @property
+    def has_dropout(self) -> bool:
+        return self.dropout_prob > 0.0
+
+    @property
+    def has_churn(self) -> bool:
+        return (self.leave_prob > 0.0 or self.join_prob > 0.0
+                or self.initial_present_frac < 1.0)
+
+    @property
+    def has_corruption(self) -> bool:
+        return self.corrupt_mode != "none" and self.corrupt_frac > 0.0
+
+    def any_faults(self) -> bool:
+        """True when any *runtime* axis is active (label skew is a
+        data-prep axis and does not need a FaultTrace)."""
+        return self.has_dropout or self.has_churn or self.has_corruption
+
+
+FAULT_PROFILES: Dict[str, FaultProfile] = {p.name: p for p in [
+    FaultProfile("none", "no faults"),
+    FaultProfile("dropout",
+                 "20% of completed updates are lost mid-round",
+                 dropout_prob=0.2),
+    FaultProfile("churn",
+                 "70% of the universe present at t=0; 15%/25% per-round "
+                 "leave/join rates",
+                 leave_prob=0.15, join_prob=0.25, initial_present_frac=0.7),
+    FaultProfile("byzantine_signflip",
+                 "20% of clients send sign-flipped updates",
+                 corrupt_mode="sign_flip", corrupt_frac=0.2),
+    FaultProfile("byzantine_noise",
+                 "20% of clients add N(0, 0.5^2) noise to every weight",
+                 corrupt_mode="gaussian", corrupt_frac=0.2, noise_std=0.5),
+    FaultProfile("byzantine_boost",
+                 "10% of clients send 10x-boosted update deltas",
+                 corrupt_mode="scaled", corrupt_frac=0.1, scale_factor=10.0),
+    FaultProfile("label_skew",
+                 "Dirichlet(0.3) label-skew non-IID partitioning",
+                 label_skew_alpha=0.3),
+    FaultProfile("hostile",
+                 "everything at once: dropout + churn + 20% sign-flip "
+                 "Byzantine + Dirichlet(0.5) label skew",
+                 dropout_prob=0.1, leave_prob=0.1, join_prob=0.2,
+                 initial_present_frac=0.8, corrupt_mode="sign_flip",
+                 corrupt_frac=0.2, label_skew_alpha=0.5),
+]}
+
+
+def get_fault_profile(profile) -> Optional[FaultProfile]:
+    """Coerce None | registry name | FaultProfile into a profile."""
+    if profile is None:
+        return None
+    if isinstance(profile, FaultProfile):
+        return profile
+    if isinstance(profile, str):
+        try:
+            return FAULT_PROFILES[profile]
+        except KeyError:
+            raise ValueError(
+                f"unknown fault profile {profile!r} "
+                f"(expected one of {sorted(FAULT_PROFILES)})") from None
+    raise TypeError(f"cannot derive a fault profile from "
+                    f"{type(profile).__name__}")
+
+
+class FaultTrace:
+    """Deterministic per-run realization of a ``FaultProfile``.
+
+    Dropout is drawn from per-client streams indexed by the client's own
+    dispatch ordinal (the same per-(client, dispatch) contract as
+    ``CapabilityTrace``), churn from per-round streams, and Byzantine
+    membership once at construction — so every query is a pure function
+    of ``(run seed, profile, cid, index)``.  Lazy caches only memoize
+    those pure functions: a ``FaultTrace`` rebuilt after a checkpoint
+    restore regenerates identical draws.
+    """
+
+    def __init__(self, profile: FaultProfile, n_clients: int, seed: int = 0):
+        self.profile = profile
+        self.n = int(n_clients)
+        self._seed = (int(seed), int(profile.seed))
+        self.byzantine = np.zeros(self.n, bool)
+        if profile.has_corruption:
+            n_bad = min(self.n, int(round(profile.corrupt_frac * self.n)))
+            if n_bad > 0:
+                rng = np.random.default_rng(np.random.SeedSequence(
+                    (*self._seed, _TAG_BYZANTINE)))
+                self.byzantine[rng.choice(self.n, size=n_bad,
+                                          replace=False)] = True
+        self._drop_draws: Dict[int, List[float]] = {}
+        self._present: List[np.ndarray] = []
+
+    # -- dropout ----------------------------------------------------------
+
+    def dropped(self, cid: int, dispatch_index: int) -> bool:
+        """Was this (client, dispatch)'s update lost in transit?"""
+        if not self.profile.has_dropout:
+            return False
+        draws = self._drop_draws.setdefault(int(cid), [])
+        # one fresh stream per ordinal: extension order can never
+        # matter, only (cid, dispatch_index) does
+        while len(draws) <= dispatch_index:
+            rng = np.random.default_rng(np.random.SeedSequence(
+                (*self._seed, _TAG_DROPOUT, int(cid), len(draws))))
+            draws.append(float(rng.random()))
+        return draws[dispatch_index] < self.profile.dropout_prob
+
+    # -- churn ------------------------------------------------------------
+
+    def present_mask(self, t: int) -> np.ndarray:
+        """(n,) bool universe-presence mask for round/flush ``t``."""
+        if not self.profile.has_churn:
+            return np.ones(self.n, bool)
+        while len(self._present) <= t:
+            r = len(self._present)
+            rng = np.random.default_rng(np.random.SeedSequence(
+                (*self._seed, _TAG_CHURN, r)))
+            if r == 0:
+                frac = self.profile.initial_present_frac
+                mask = (np.ones(self.n, bool) if frac >= 1.0
+                        else rng.random(self.n) < frac)
+            else:
+                prev = self._present[-1]
+                u = rng.random(self.n)
+                mask = np.where(prev, u >= self.profile.leave_prob,
+                                u < self.profile.join_prob)
+            self._present.append(mask)
+        return self._present[t]
+
+    def churn_step(self, t: int) -> Tuple[np.ndarray, int, int]:
+        """Presence mask at ``t`` plus (joins, leaves) vs ``t - 1``."""
+        mask = self.present_mask(t)
+        if t <= 0 or not self.profile.has_churn:
+            return mask, 0, 0
+        prev = self.present_mask(t - 1)
+        joins = int((mask & ~prev).sum())
+        leaves = int((prev & ~mask).sum())
+        return mask, joins, leaves
+
+    # -- corruption -------------------------------------------------------
+
+    def corrupt_factor(self) -> float:
+        """Delta multiplier for a Byzantine client: corrupted params are
+        ``base + factor * (params - base)`` (gaussian keeps factor 1 and
+        adds noise instead)."""
+        mode = self.profile.corrupt_mode
+        if mode == "sign_flip":
+            return -1.0
+        if mode == "scaled":
+            return float(self.profile.scale_factor)
+        return 1.0
+
+    def _noise_like(self, leaf_shapes, leaf_dtypes, cid: int,
+                    dispatch_index: int) -> List[np.ndarray]:
+        """Per-(client, dispatch) Gaussian noise, one array per leaf in
+        flatten order — deterministic regardless of engine."""
+        rng = np.random.default_rng(np.random.SeedSequence(
+            (*self._seed, _TAG_NOISE, int(cid), int(dispatch_index))))
+        std = self.profile.noise_std
+        return [rng.normal(0.0, std, size=shape).astype(dt)
+                for shape, dt in zip(leaf_shapes, leaf_dtypes)]
+
+
+def corrupt_update(params: Pytree, base: Pytree, cid: int,
+                   dispatch_index: int, trace: FaultTrace
+                   ) -> Tuple[Pytree, bool]:
+    """Corrupt one client's update tree if the client is Byzantine.
+
+    Returns ``(params, corrupted?)`` — honest clients' trees are
+    returned *unchanged* (same objects, bitwise identical), preserving
+    every no-fault parity contract."""
+    if not trace.profile.has_corruption or not trace.byzantine[cid]:
+        return params, False
+    mode = trace.profile.corrupt_mode
+    if mode == "gaussian":
+        leaves, treedef = jax.tree.flatten(params)
+        noise = trace._noise_like([np.shape(x) for x in leaves],
+                                  [np.asarray(x).dtype for x in leaves],
+                                  cid, dispatch_index)
+        return treedef.unflatten([x + n for x, n in zip(leaves, noise)]), True
+    f = trace.corrupt_factor()
+    out = jax.tree.map(lambda b, p: b + f * (p - b), base, params)
+    return out, True
+
+
+def corrupt_stacked(stacked: Pytree, base: Pytree, cids: np.ndarray,
+                    dispatch_ix: np.ndarray, trace: FaultTrace
+                    ) -> Tuple[Pytree, int]:
+    """Corrupt the Byzantine lanes of a (C, ...) stacked update pytree.
+
+    Only corrupted lanes are rewritten (indexed ``.at[idx].set``), so
+    honest lanes stay bitwise identical to the engine's output.  Returns
+    ``(stacked, n_corrupted)``."""
+    if not trace.profile.has_corruption:
+        return stacked, 0
+    mask = trace.byzantine[np.asarray(cids, np.int64)]
+    idx = np.nonzero(mask)[0]
+    if idx.size == 0:
+        return stacked, 0
+    mode = trace.profile.corrupt_mode
+    sub = jax.tree.map(lambda x: x[idx], stacked)
+    if mode == "gaussian":
+        leaves, treedef = jax.tree.flatten(sub)
+        lanes = []
+        for lane, (cid, k) in enumerate(zip(np.asarray(cids)[idx],
+                                            np.asarray(dispatch_ix)[idx])):
+            noise = trace._noise_like(
+                [x.shape[1:] for x in leaves],
+                [np.asarray(x).dtype for x in leaves], int(cid), int(k))
+            lanes.append(noise)
+        noise_stack = [np.stack([lanes[i][j] for i in range(len(lanes))])
+                       for j in range(len(leaves))]
+        sub = treedef.unflatten([x + jnp.asarray(n)
+                                 for x, n in zip(leaves, noise_stack)])
+    else:
+        f = trace.corrupt_factor()
+        sub = jax.tree.map(lambda b, x: b[None] + f * (x - b[None]),
+                           base, sub)
+    out = jax.tree.map(lambda x, s: jnp.asarray(x).at[jnp.asarray(idx)]
+                       .set(s), stacked, sub)
+    return out, int(idx.size)
+
+
+# ---------------------------------------------------------------------------
+# label-skew non-IID partitioning (data-prep axis)
+# ---------------------------------------------------------------------------
+
+def _label_keys(labels: np.ndarray) -> np.ndarray:
+    """Scalar per-sample class key: the label itself, or the first token
+    of a sequence label (char-LM / transformer-LM workloads)."""
+    labels = np.asarray(labels)
+    if labels.ndim == 1:
+        return labels
+    return labels.reshape(labels.shape[0], -1)[:, 0]
+
+
+def dirichlet_label_skew(clients_data: Sequence[Pytree], alpha: float,
+                         seed: int = 0, label_field: str = "y"
+                         ) -> List[Pytree]:
+    """Repartition a federated dataset with Dirichlet(α) label skew.
+
+    All samples are pooled, each client draws class proportions
+    ``p_i ~ Dir(α · 1_K)`` over the pooled label set, and its ``m_i``
+    slots are filled by sampling classes from ``p_i`` and popping
+    shuffled per-class index pools (falling back to with-replacement
+    resampling when a class pool runs dry).  Client sizes — and hence
+    every ``ClientSpec`` / budget / deadline derived from them — are
+    preserved; only *which* samples a client holds changes.  Lower α ⇒
+    more skew; α → ∞ recovers an IID shuffle."""
+    if alpha <= 0.0:
+        raise ValueError(f"dirichlet alpha must be > 0, got {alpha}")
+    clients = list(clients_data)
+    if not clients:
+        return []
+    if label_field not in clients[0]:
+        raise ValueError(f"label-skew partitioning needs a {label_field!r} "
+                         f"field in the client schema")
+    pooled = jax.tree.map(lambda *vs: np.concatenate(
+        [np.asarray(v) for v in vs]), *clients)
+    keys = _label_keys(pooled[label_field])
+    classes = np.unique(keys)
+    rng = np.random.default_rng(np.random.SeedSequence(
+        (int(seed), _TAG_SKEW)))
+    pools = {}
+    for cls in classes:
+        ix = np.nonzero(keys == cls)[0]
+        pools[int(cls)] = list(rng.permutation(ix))
+    full = {int(cls): np.nonzero(keys == cls)[0] for cls in classes}
+    k_cls = len(classes)
+    out = []
+    for client in clients:
+        m = len(np.asarray(next(iter(client.values()))))
+        props = rng.dirichlet(np.full(k_cls, float(alpha)))
+        draws = rng.choice(k_cls, size=m, p=props)
+        take = np.empty(m, np.int64)
+        for j, ci in enumerate(draws):
+            cls = int(classes[ci])
+            pool = pools[cls]
+            take[j] = pool.pop() if pool else int(rng.choice(full[cls]))
+        out.append(jax.tree.map(lambda v: np.asarray(v)[take], pooled))
+    return out

@@ -121,7 +121,7 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
                  epochs: int = 3, batch_size: int = 8, lr: float = 0.05,
                  straggler_pct: float = 30.0,
                  max_updates: Optional[int] = None, concurrency: int = 8,
-                 scheduler=None, aggregator=None,
+                 scheduler=None, aggregator=None, faults=None,
                  fleet_engine: str = "batched",
                  use_kernel: Optional[bool] = None,
                  workload=None, n_clients: int = 24,
@@ -160,14 +160,29 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
     sample-visit of the workload and is threaded into whichever
     runtime's config derives deadlines, budgets, and durations — see
     ``repro.fed.cost.workload_cost_model`` for measuring it.
+
+    ``faults`` is the orthogonal fault axis (a
+    ``repro.fed.fleet.faults.FaultProfile``, a registry name like
+    ``"byzantine_signflip"``, or None): its label-skew component
+    repartitions ``clients_data`` (sizes preserved, so specs and
+    capability draws are unchanged) before the run, and the remaining
+    axes — dropout, churn, update corruption — are threaded into
+    whichever runtime executes.  ``aggregator`` likewise accepts a
+    robust-method name (``repro.fed.aggregators.ROBUST_METHODS``) on
+    every runtime, so a fault profile x aggregator grid runs the same
+    scenario end to end.
     """
     # late imports: repro.fed.{server,events,strategies} import nothing from
     # fleet, keeping this the only direction of coupling
     from repro.core.coreset import FedCoreConfig
+    from repro.fed.aggregators import (AGGREGATORS, ROBUST_METHODS,
+                                       RobustAggregate, SyncWeightedMean)
     from repro.fed.events import AsyncFLConfig, run_federated_async
     from repro.fed.fleet.async_engine import (AsyncFleetConfig,
                                               run_async_fleet)
     from repro.fed.fleet.batched import FleetConfig, run_fleet
+    from repro.fed.fleet.faults import (dirichlet_label_skew,
+                                        get_fault_profile)
     from repro.fed.server import FLConfig, run_federated
     from repro.fed.strategies import FedCore, LocalTrainer
 
@@ -182,6 +197,13 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
     if model is None or clients_data is None:
         raise ValueError("run_scenario needs model + clients_data, or a "
                          "workload to build them from")
+    profile = get_fault_profile(faults)
+    fault_name = profile.name if profile is not None else "none"
+    if profile is not None and profile.label_skew_alpha is not None:
+        # label skew repartitions the data but preserves per-client
+        # sizes, so specs, budgets, and capability draws are untouched
+        clients_data = dirichlet_label_skew(
+            clients_data, profile.label_skew_alpha, seed=seed)
     sizes = client_sizes(clients_data)
     specs, trace = build_scenario(name, sizes, seed)
     core_cfg = FedCoreConfig(use_kernel=use_kernel)
@@ -189,7 +211,20 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
     # with the scenario context the report CLI keys on
     get_recorder().event("scenario", scenario=name, runtime=runtime,
                          workload=(wl.name if wl is not None else None),
+                         faults=fault_name,
                          n_clients=len(specs), seed=seed)
+
+    def _streaming(round_size: int):
+        """Coerce ``aggregator`` into a streaming Aggregator instance for
+        the event-driven runtime (robust names buffer one round's worth
+        of updates before combining, matching the sync semantics)."""
+        if aggregator is None or not isinstance(aggregator, str):
+            return aggregator
+        if aggregator in ROBUST_METHODS:
+            return RobustAggregate(aggregator, round_size=round_size)
+        if aggregator == "sync_mean":
+            return SyncWeightedMean(round_size=round_size)
+        return AGGREGATORS[aggregator]()
 
     if runtime == "sync":
         cfg = FLConfig(rounds=rounds, clients_per_round=clients_per_round,
@@ -198,8 +233,11 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
                        cost=cost)
         strat = FedCore(LocalTrainer(model, lr, batch_size, cost=cost),
                         core_cfg)
+        sync_agg = aggregator if isinstance(aggregator, str) else \
+            "weighted_mean"
         out = run_federated(model, clients_data, specs, strat, cfg,
                             test_data=test_data, scheduler=scheduler,
+                            aggregator=sync_agg, faults=profile,
                             verbose=verbose)
     elif runtime == "async":
         cfg = AsyncFLConfig(
@@ -211,16 +249,20 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
         strat = FedCore(LocalTrainer(model, lr, batch_size, cost=cost),
                         core_cfg)
         out = run_federated_async(model, clients_data, specs, strat, cfg,
-                                  aggregator=aggregator,
+                                  aggregator=_streaming(clients_per_round),
                                   test_data=test_data, scheduler=scheduler,
-                                  verbose=verbose)
+                                  faults=profile, verbose=verbose)
     elif runtime == "fleet":
+        fleet_agg = (aggregator if isinstance(aggregator, str)
+                     else "weighted_mean")
         cfg = FleetConfig(epochs=epochs, batch_size=batch_size, lr=lr,
-                          seed=seed, use_kernel=use_kernel, cost=cost)
+                          seed=seed, use_kernel=use_kernel, cost=cost,
+                          aggregator=fleet_agg)
         out = run_fleet(model, clients_data, specs, cfg, rounds=rounds,
                         scheduler=scheduler, trace=trace,
                         straggler_pct=straggler_pct, test_data=test_data,
-                        engine=fleet_engine, verbose=verbose)
+                        engine=fleet_engine, faults=profile,
+                        verbose=verbose)
     elif runtime == "async_fleet":
         cfg = AsyncFleetConfig(
             max_updates=max_updates or rounds,
@@ -232,11 +274,12 @@ def run_scenario(name: str, runtime: str, model=None, clients_data=None,
         out = run_async_fleet(model, clients_data, specs, cfg,
                               aggregator=aggregator, scheduler=scheduler,
                               test_data=test_data, engine=fleet_engine,
-                              verbose=verbose)
+                              faults=profile, verbose=verbose)
     else:
         raise ValueError(f"unknown runtime {runtime!r}")
     out["scenario"] = name
     out["runtime"] = runtime
+    out.setdefault("faults", fault_name)
     if wl is not None:
         out["workload"] = wl.name
     return out

@@ -167,3 +167,30 @@ class AdaptiveParticipation:
             "mean_observed_capability": float(self.observed.mean()),
             "n_observed_clients": int((self._n_obs > 0).sum()),
         }
+
+    # -- checkpoint/resume ------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-able snapshot of all mutable state — observed-capability
+        EWMA, plateau tracker, and the exploration RNG's bit-generator
+        state — so a resumed run replays selection byte-identically."""
+        return {
+            "observed": self.observed.tolist(),
+            "n_obs": self._n_obs.tolist(),
+            "cohort": int(self.cohort),
+            "best_loss": float(self._best_loss),
+            "stall": int(self._stall),
+            "round": int(self._round),
+            "growth_log": list(self.growth_log),
+            "rng_state": self._rng.bit_generator.state,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.observed = np.asarray(state["observed"], np.float64)
+        self._n_obs = np.asarray(state["n_obs"], np.int64)
+        self.cohort = int(state["cohort"])
+        self._best_loss = float(state["best_loss"])
+        self._stall = int(state["stall"])
+        self._round = int(state["round"])
+        self.growth_log = [int(r) for r in state["growth_log"]]
+        self._rng.bit_generator.state = state["rng_state"]

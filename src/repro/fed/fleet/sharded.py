@@ -75,11 +75,13 @@ class ShardedFleetEngine(FleetEngine):
 
     ``run_group_sharded`` executes one cohort group data-parallel over
     the ``"clients"`` mesh axis and returns the group's *weighted
-    parameter sum* (already psum-reduced and replicated) instead of the
-    per-client parameter stack — the server-side mean becomes one divide
-    at the end of the round (``combine_group_sums``).  The inherited
-    ``run_group`` (batched / loop) still works, which is what the parity
-    tests and the single-device fallback rely on.
+    parameter sum* (already psum-reduced and replicated) — the
+    server-side mean becomes one divide at the end of the round
+    (``combine_group_sums``) — plus the still-sharded per-client stack
+    for consumers that need individual updates (robust aggregation,
+    Byzantine corruption).  The inherited ``run_group`` (batched / loop)
+    still works, which is what the parity tests and the single-device
+    fallback rely on.
     """
 
     def __init__(self, model, cfg: FleetConfig, mesh: Optional[Mesh] = None):
@@ -116,13 +118,15 @@ class ShardedFleetEngine(FleetEngine):
                 p, losses, _ = group_body(params, broadcast(params, c),
                                           data, w, idx)
                 part, wsum = weighted_psum_sum(lane_w, p, axes)
-                return part, wsum, losses
+                return part, wsum, losses, p
 
             def specs(params):
                 shard = P(CLIENT_AXIS)
+                shard_tree = jax.tree.map(lambda _: shard, params)
                 in_specs = (jax.tree.map(lambda _: P(), params), shard,
                             shard, shard, shard)
-                out_specs = (jax.tree.map(lambda _: P(), params), P(), shard)
+                out_specs = (jax.tree.map(lambda _: P(), params), P(),
+                             shard, shard_tree)
                 return in_specs, out_specs
         else:
             def body(params, data, w, lane_w, idx1, valid, steps):
@@ -130,14 +134,15 @@ class ShardedFleetEngine(FleetEngine):
                 p, losses, meds = group_body(params, broadcast(params, c),
                                              data, w, valid, idx1, steps)
                 part, wsum = weighted_psum_sum(lane_w, p, axes)
-                return part, wsum, losses, meds
+                return part, wsum, losses, meds, p
 
             def specs(params):
                 shard = P(CLIENT_AXIS)
+                shard_tree = jax.tree.map(lambda _: shard, params)
                 in_specs = (jax.tree.map(lambda _: P(), params), shard,
                             shard, shard, shard, shard, shard)
                 out_specs = (jax.tree.map(lambda _: P(), params), P(),
-                             shard, shard)
+                             shard, shard, shard_tree)
                 return in_specs, out_specs
 
         @jax.jit
@@ -158,10 +163,14 @@ class ShardedFleetEngine(FleetEngine):
     def run_group_sharded(self, params: Pytree, group: CohortGroup,
                           weights: np.ndarray
                           ) -> Tuple[Pytree, jnp.ndarray, np.ndarray,
-                                     Optional[np.ndarray]]:
+                                     Optional[np.ndarray], Pytree]:
         """Run one group over the mesh; returns (weighted param sum,
-        weight total, per-client losses, medoid indices or None) with
-        padding lanes already stripped from losses/medoids."""
+        weight total, per-client losses, medoid indices or None,
+        per-client param stack) with padding lanes already stripped from
+        losses/medoids/stack.  The stack stays sharded and lazy — it is
+        only gathered when a robust aggregation rule or fault-corruption
+        pass actually consumes it (the weighted-mean path uses the
+        psum-reduced sum and never touches it)."""
         cfg = self.cfg
         c = group.n_clients
         pad = (-c) % self.n_devices
@@ -194,16 +203,20 @@ class ShardedFleetEngine(FleetEngine):
             idx_all = group.perms.reshape(c, t_full, cfg.batch_size)
             if group.k == 0:
                 idx = self._shard_put(_pad_lanes(idx_all, pad))
-                part, wsum, losses = program(params, data, w, lane_w, idx)
-                return part, wsum, losses[:c], None
+                part, wsum, losses, stack = program(params, data, w,
+                                                    lane_w, idx)
+                stack = jax.tree.map(lambda x: x[:c], stack)
+                return part, wsum, losses[:c], None, stack
             idx1 = self._shard_put(
                 _pad_lanes(idx_all[:, : m_pad // cfg.batch_size], pad))
             valid = self._shard_put(_pad_lanes(group.valid, pad))
             steps = self._shard_put(
                 np.zeros((c + pad, max(cfg.epochs - 1, 1)), np.float32))
-            part, wsum, losses, meds = program(params, data, w, lane_w,
-                                               idx1, valid, steps)
-        return part, wsum, losses[:c], meds[:c]
+            part, wsum, losses, meds, stack = program(params, data, w,
+                                                      lane_w, idx1, valid,
+                                                      steps)
+            stack = jax.tree.map(lambda x: x[:c], stack)
+        return part, wsum, losses[:c], meds[:c], stack
 
     def combine_group_sums(self, partials: List[Tuple[Pytree, jnp.ndarray]],
                            fallback: Pytree) -> Pytree:

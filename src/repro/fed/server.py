@@ -77,7 +77,8 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
                   specs: List[ClientSpec], strategy: Strategy,
                   cfg: FLConfig, test_data: Optional[Dict] = None,
                   init_params=None, eval_batch: int = 512,
-                  scheduler=None, verbose: bool = False) -> Dict[str, Any]:
+                  scheduler=None, aggregator: str = "weighted_mean",
+                  faults=None, verbose: bool = False) -> Dict[str, Any]:
     """Synchronous Alg. 1 round loop.
 
     ``scheduler`` (optional) is an adaptive-participation policy with the
@@ -87,7 +88,22 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
     and is fed realized durations, so FLANP-style doubling cohorts work on
     the sync server too.  ``cfg.trace`` perturbs each dispatch's
     capability exactly as the async runtime does.
+
+    ``aggregator`` selects the round merge: ``"weighted_mean"`` (Alg. 1)
+    or any robust estimator from ``repro.fed.aggregators.ROBUST_METHODS``
+    (trimmed_mean / median / krum / multi_krum / norm_clip).  ``faults``
+    (a ``repro.fed.fleet.faults`` profile or name) injects seeded
+    dropout / churn / Byzantine corruption without perturbing surviving
+    clients' capability draws.
     """
+    from repro.fed.aggregators import ROBUST_METHODS, robust_combine, \
+        stack_params
+    from repro.fed.fleet.faults import (FaultTrace, corrupt_update,
+                                        get_fault_profile)
+    if aggregator != "weighted_mean" and aggregator not in ROBUST_METHODS:
+        raise ValueError(
+            f"unknown sync aggregator {aggregator!r} (expected "
+            f"'weighted_mean' or one of {sorted(ROBUST_METHODS)})")
     rng = np.random.default_rng(cfg.seed)
     params = (init_params if init_params is not None
               else model.init(jax.random.PRNGKey(cfg.seed)))
@@ -98,11 +114,16 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
 
     history: List[RoundRecord] = []
     eval_fn = make_eval_fn(model, test_data, eval_batch) if test_data else None
-    aggregator = SyncWeightedMean(cfg.weight_by_samples)
+    mean_agg = SyncWeightedMean(cfg.weight_by_samples)
     trace = CapabilityTrace(cfg.trace) if cfg.trace is not None else None
     tracei = DispatchTraceIndexer(len(specs), trace)
+    profile = get_fault_profile(faults)
+    ftrace = (FaultTrace(profile, len(specs), seed=cfg.seed)
+              if profile is not None and profile.any_faults() else None)
+    fault_name = profile.name if profile is not None else "none"
     obs = active_recorder(verbose)
     obs.run_meta(runtime="sync", engine="sync", strategy=strategy.name,
+                 aggregator=aggregator, faults=fault_name,
                  n_clients=len(specs), rounds=cfg.rounds,
                  deadline=float(deadline), seed=cfg.seed)
 
@@ -114,9 +135,20 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
                 selected = [int(c) for c in scheduler.select()]
             else:
                 selected = sample_clients(specs, cfg.clients_per_round, rng)
+            if ftrace is not None and ftrace.profile.has_churn:
+                # churned-out clients silently miss the round; the
+                # sampling draw above already happened, so survivors'
+                # RNG streams match the churn-free run
+                mask, joins, leaves = ftrace.churn_step(r)
+                selected = [c for c in selected if mask[c]]
+                obs.metrics.counter("faults.churn_joins").inc(joins)
+                obs.metrics.counter("faults.churn_leaves").inc(leaves)
+                obs.metrics.gauge("faults.n_present").set(int(mask.sum()))
         results: List[ClientResult] = []
         times: List[float] = []
+        drop_times: List[float] = []
         dropped = 0
+        n_corrupted = 0
         client_rows = []    # (cid, sim duration, dropped, violated)
         with obs.span("local_update", round=r):
             for cid in selected:
@@ -132,12 +164,35 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
                     dropped += 1
                     obs.metrics.counter("drops").inc()
                     client_rows.append((cid, float(deadline), True, False))
+                    # dropped stragglers in FedAvg-DS still busy until τ
+                    drop_times.append(float(deadline))
                     if scheduler is not None:   # a drop still occupies τ
                         scheduler.observe(cid, spec.c * deadline, deadline)
                 else:
                     duration = res.sim_time
                     if trace is not None:
                         duration *= tracei.jitter(spec, k)
+                    if scheduler is not None:
+                        scheduler.observe(cid, res.sim_time * spec.c,
+                                          duration)
+                    if ftrace is not None and ftrace.dropped(cid, k):
+                        # fault dropout: the client trained (its trace
+                        # cursor advanced, the round waits for it) but
+                        # the update never reaches the server
+                        dropped += 1
+                        obs.metrics.counter("faults.dropped_updates").inc()
+                        client_rows.append((cid, float(duration), True,
+                                            False))
+                        drop_times.append(float(duration))
+                        continue
+                    if ftrace is not None and ftrace.profile.has_corruption:
+                        cp, was_c = corrupt_update(res.params, params,
+                                                   cid, k, ftrace)
+                        if was_c:
+                            n_corrupted += 1
+                            obs.metrics.counter(
+                                "faults.corrupted_updates").inc()
+                            res = dataclasses.replace(res, params=cp)
                     results.append(res)
                     times.append(duration)
                     obs.metrics.histogram("client_busy_s").observe(duration)
@@ -145,17 +200,21 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
                         obs.metrics.counter("deadline_violations").inc()
                     client_rows.append((cid, float(duration), False,
                                         bool(res.deadline_violated)))
-                    if scheduler is not None:
-                        scheduler.observe(cid, res.sim_time * spec.c,
-                                          duration)
 
         with obs.span("aggregate", round=r):
             if results:
-                params = aggregator.aggregate(
-                    [r_.params for r_ in results],
-                    [r_.n_samples for r_ in results])
-        # dropped stragglers in FedAvg-DS still busy until τ
-        round_time = max(times + ([deadline] if dropped else [0.0]))
+                if aggregator == "weighted_mean":
+                    params = mean_agg.aggregate(
+                        [r_.params for r_ in results],
+                        [r_.n_samples for r_ in results],
+                        fallback=params)
+                else:
+                    weights = ([r_.n_samples for r_ in results]
+                               if cfg.weight_by_samples else None)
+                    params = robust_combine(
+                        stack_params([r_.params for r_ in results]),
+                        aggregator, weights=weights, base=params)
+        round_time = max(times + drop_times + [0.0])
         train_loss = float(np.mean([r_.final_loss for r_ in results])
                            ) if results else float("nan")
         if scheduler is not None:
@@ -174,6 +233,7 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
         obs.event("round", runtime="sync", engine="sync",
                   label=strategy.name, round=r,
                   n_participants=rec.n_participants, n_dropped=dropped,
+                  n_corrupted=n_corrupted,
                   n_coreset=rec.n_coreset, n_violations=rec.n_violations,
                   sim_round_time=float(round_time),
                   wall_time_s=time.perf_counter() - t0,
@@ -191,6 +251,8 @@ def run_federated(model, clients_data: List[Dict[str, np.ndarray]],
         "history": history,
         "deadline": deadline,
         "strategy": strategy.name,
+        "aggregator": aggregator,
+        "faults": fault_name,
     }
 
 

@@ -65,7 +65,8 @@ RUNTIMES = ("sync", "async", "fleet", "async_fleet")
 PHASES = ("cohort_build", "cohort_select", "local_update", "local_sgd",
           "grad_features", "distances", "selection", "coreset_group",
           "coreset_epochs", "dispatch", "gather", "aggregate",
-          "trace_account", "eval", "buffer_fill", "dispatch_wave")
+          "trace_account", "eval", "buffer_fill", "dispatch_wave",
+          "checkpoint")
 
 
 def _fail(msg: str, record: dict) -> None:

@@ -115,8 +115,12 @@ def test_delayed_gradient_merge_matches_sequential():
 
 def test_as_merge_rule_coercion():
     assert isinstance(as_merge_rule(None), FedBuffMerge)
-    for name, cls in ASYNC_MERGES.items():
-        assert isinstance(as_merge_rule(name), cls)
+    for name, factory in ASYNC_MERGES.items():
+        # robust-method entries are functools.partial(RobustMerge, method)
+        cls = getattr(factory, "func", factory)
+        rule = as_merge_rule(name)
+        assert isinstance(rule, cls)
+        assert rule.name == name
     rule = as_merge_rule(FedAsync(mixing=0.3, staleness_exponent=1.0))
     assert isinstance(rule, FedAsyncMerge)
     assert rule.mixing == 0.3 and rule.staleness_exponent == 1.0

@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import (latest_checkpoint, load_pytree,
-                              load_server_state, save_pytree,
-                              save_server_state)
+                              load_server_meta, load_server_state,
+                              save_pytree, save_server_state)
 
 
 def _tree():
@@ -47,3 +47,41 @@ def test_server_state_resume(tmp_path):
 def test_load_missing_returns_none(tmp_path):
     params, rnd = load_server_state(str(tmp_path / "nope"))
     assert params is None and rnd == -1
+
+
+def test_roundtrip_without_like_preserves_dtypes_and_treedef(tmp_path):
+    tree = {"w": jnp.arange(6, dtype=jnp.int32).reshape(2, 3),
+            "opt": (jnp.full(2, 0.5, jnp.float32), np.arange(3, dtype=np.int64)),
+            "log": [np.float64(1.5), np.ones(2, np.float32)],
+            "flag": None}
+    path = str(tmp_path / "d.npz")
+    save_pytree(path, tree)
+    back = load_pytree(path)          # no `like`: structure from the file
+    assert jax.tree.structure(back, is_leaf=lambda x: x is None) == \
+        jax.tree.structure(tree, is_leaf=lambda x: x is None)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_checkpoint_skips_unreadable_files(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    save_server_state(d, 2, tree)
+    # a partially-written (garbage) npz with a higher round number must
+    # not shadow the last good checkpoint
+    with open(os.path.join(d, "ckpt_000009.npz"), "wb") as f:
+        f.write(b"\x00not-a-zipfile")
+    assert latest_checkpoint(d).endswith("ckpt_000002.npz")
+    params, rnd = load_server_state(d, like=tree)
+    assert rnd == 2 and params is not None
+
+
+def test_load_server_meta_roundtrip(tmp_path):
+    d = str(tmp_path)
+    save_server_state(d, 5, _tree(),
+                      extra={"kind": "fleet", "rng": [1, 2, 3]})
+    meta = load_server_meta(d)
+    assert meta["kind"] == "fleet"
+    assert meta["rng"] == [1, 2, 3]
+    assert load_server_meta(str(tmp_path / "nope")) is None

@@ -1,0 +1,328 @@
+"""Fault injection: dropout / churn / Byzantine corruption / label skew,
+robust aggregation, and checkpoint/resume byte-identity.
+
+The load-bearing regression here is **trace alignment**: injecting a
+fault must never perturb the per-(client, dispatch-ordinal) capability
+and jitter draws of surviving clients.  A dropped client's dispatch is
+still recorded in ``DispatchTraceIndexer``, so every other client's
+stream is byte-identical with the fault-free run.
+"""
+import dataclasses
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import fleet_bundle
+from repro.fed.aggregators import (AGGREGATORS, ROBUST_METHODS,
+                                   weighted_mean_params)
+from repro.fed.fleet.async_engine import AsyncFleetConfig, run_async_fleet
+from repro.fed.fleet.batched import FleetConfig, run_fleet
+from repro.fed.fleet.faults import (FAULT_PROFILES, FaultProfile, FaultTrace,
+                                    corrupt_stacked, dirichlet_label_skew,
+                                    get_fault_profile)
+from repro.fed.fleet.scheduler import AdaptiveParticipation
+from repro.fed.fleet.scenarios import run_scenario
+
+
+def _same_tree(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# fault primitives
+# ---------------------------------------------------------------------------
+
+def test_profile_registry_and_validation():
+    assert "none" in FAULT_PROFILES and "hostile" in FAULT_PROFILES
+    assert get_fault_profile(None) is None
+    assert get_fault_profile("dropout").has_dropout
+    assert not FAULT_PROFILES["none"].any_faults()
+    with pytest.raises(ValueError):
+        get_fault_profile("not_a_profile")
+    with pytest.raises(ValueError):
+        FaultProfile(name="bad", corrupt_mode="exotic", corrupt_frac=0.1)
+
+
+def test_fault_trace_deterministic():
+    p = FAULT_PROFILES["hostile"]
+    a = FaultTrace(p, 40, seed=7)
+    b = FaultTrace(p, 40, seed=7)
+    assert np.array_equal(a.byzantine, b.byzantine)
+    draws_a = [a.dropped(cid, k) for cid in range(40) for k in range(5)]
+    draws_b = [b.dropped(cid, k) for cid in range(40) for k in range(5)]
+    assert draws_a == draws_b
+    for t in range(6):
+        assert np.array_equal(a.present_mask(t), b.present_mask(t))
+    # out-of-order queries hit the same per-ordinal streams
+    c = FaultTrace(p, 40, seed=7)
+    assert c.dropped(3, 4) == a.dropped(3, 4)
+    assert c.dropped(3, 0) == a.dropped(3, 0)
+
+
+def test_fault_trace_seed_changes_draws():
+    p = FAULT_PROFILES["byzantine_signflip"]
+    a, b = FaultTrace(p, 64, seed=0), FaultTrace(p, 64, seed=1)
+    assert not np.array_equal(a.byzantine, b.byzantine)
+
+
+def test_corrupt_stacked_leaves_honest_lanes_untouched():
+    p = FAULT_PROFILES["byzantine_signflip"]
+    tr = FaultTrace(p, 12, seed=0)
+    rng = np.random.default_rng(0)
+    base = {"w": rng.normal(size=(4, 3)).astype(np.float32)}
+    stack = {"w": rng.normal(size=(12, 4, 3)).astype(np.float32)}
+    out, n = corrupt_stacked(stack, base, np.arange(12),
+                             np.zeros(12, np.int64), tr)
+    byz = tr.byzantine
+    assert n == int(byz.sum()) > 0
+    for i in range(12):
+        lane = np.asarray(out["w"][i])
+        if byz[i]:          # sign flip: base − (p − base) = 2·base − p
+            np.testing.assert_allclose(
+                lane, 2.0 * base["w"] - stack["w"][i], rtol=1e-6)
+        else:               # honest lanes bitwise identical
+            assert np.array_equal(lane, stack["w"][i])
+
+
+def test_churn_step_counts_transitions():
+    p = FAULT_PROFILES["churn"]
+    tr = FaultTrace(p, 100, seed=3)
+    masks = [tr.churn_step(t) for t in range(8)]
+    assert all(m.dtype == bool for m, _, _ in masks)
+    # transitions are consistent with the reported join/leave counts
+    for t in range(1, 8):
+        prev, (cur, joins, leaves) = masks[t - 1][0], masks[t]
+        assert joins == int((cur & ~prev).sum())
+        assert leaves == int((prev & ~cur).sum())
+    assert any(j or l for _, j, l in masks[1:])
+
+
+def test_dirichlet_label_skew_preserves_sizes_and_skews():
+    rng = np.random.default_rng(0)
+    clients = [{"x": rng.normal(size=(40, 3)).astype(np.float32),
+                "y": rng.integers(0, 8, 40)} for _ in range(10)]
+    skewed = dirichlet_label_skew(clients, alpha=0.2, seed=1)
+    assert [len(c["y"]) for c in skewed] == [len(c["y"]) for c in clients]
+
+    def concentration(cs):
+        # mean max-class share per client: higher = more skewed
+        return float(np.mean([np.bincount(c["y"], minlength=8).max()
+                              / len(c["y"]) for c in cs]))
+    assert concentration(skewed) > concentration(clients) + 0.1
+    # a repartition of the pooled data: same total size, no new classes
+    # (exact multiset equality does not hold — drained class pools fall
+    # back to with-replacement resampling)
+    all_before = np.concatenate([c["y"] for c in clients])
+    all_after = np.concatenate([c["y"] for c in skewed])
+    assert all_after.size == all_before.size
+    assert set(np.unique(all_after)) <= set(np.unique(all_before))
+    # and it is deterministic in the seed
+    again = dirichlet_label_skew(clients, alpha=0.2, seed=1)
+    assert all(np.array_equal(a["y"], b["y"]) for a, b in zip(skewed, again))
+
+
+# ---------------------------------------------------------------------------
+# trace alignment: a dropped dispatch is still a recorded dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def bundle():
+    return fleet_bundle("mlp", n_clients=20)
+
+
+def test_fleet_dropout_keeps_survivor_draws(bundle):
+    b = bundle
+    cfg = FleetConfig(epochs=1, batch_size=8, seed=0)
+    clean = run_fleet(b.model, b.train, b.specs, cfg, rounds=3,
+                      test_data=b.test)
+    faulty = run_fleet(b.model, b.train, b.specs, cfg, rounds=3,
+                       test_data=b.test, faults="dropout")
+    assert sum(h.n_dropped for h in faulty["history"]) > 0
+    # identical cohorts, identical per-client durations: the dropout
+    # draw consumed no shared randomness and the dispatch-trace cursors
+    # advanced exactly as in the clean run
+    for hc, hf in zip(clean["history"], faulty["history"]):
+        assert hc.client_times == hf.client_times
+
+
+def test_events_dropout_keeps_per_dispatch_draws(bundle):
+    b = bundle
+    kw = dict(model=b.model, clients_data=b.train, test_data=b.test,
+              rounds=3, clients_per_round=6, epochs=1, batch_size=8)
+    clean = run_scenario("uniform", "async", **kw)
+    faulty = run_scenario("uniform", "async", faults="dropout", **kw)
+    assert faulty["telemetry"]["n_dropped"] > 0
+
+    def durs(log):
+        out = {}
+        for line in log:
+            m = re.match(r"t=.* COMPLETE cid=(\d+) v=\d+ dur=(.*)$", line)
+            if m:
+                out.setdefault(int(m.group(1)), []).append(m.group(2))
+        return out
+    a, c = durs(clean["event_log"]), durs(faulty["event_log"])
+    # the k-th dispatch of any client realizes the same duration in both
+    # runs (schedules diverge *after* a drop delays a flush, but the
+    # per-(cid, ordinal) streams are pinned)
+    for cid, seq in c.items():
+        ref = a.get(cid, [])
+        k = min(len(ref), len(seq))
+        assert seq[:k] == ref[:k]
+
+
+def test_async_fleet_dropout_keeps_per_dispatch_draws(bundle):
+    b = bundle
+    cfg = AsyncFleetConfig(max_updates=4, buffer_k=5, concurrency=10,
+                           epochs=1, batch_size=8, seed=0)
+    clean = run_async_fleet(b.model, b.train, b.specs, cfg, test_data=b.test)
+    faulty = run_async_fleet(b.model, b.train, b.specs, cfg,
+                             test_data=b.test, faults="dropout")
+    assert faulty["telemetry"]["n_dropped_updates"] > 0
+
+    def durs(log):
+        out = {}
+        for line in log:
+            m = re.match(r"t=.* COMPLETE cid=(\d+) v=\d+ dur=(.*)$", line)
+            if m:
+                out.setdefault(int(m.group(1)), []).append(m.group(2))
+        return out
+    a, c = durs(clean["event_log"]), durs(faulty["event_log"])
+    for cid, seq in c.items():
+        ref = a.get(cid, [])
+        k = min(len(ref), len(seq))
+        assert seq[:k] == ref[:k]
+
+
+# ---------------------------------------------------------------------------
+# robust aggregation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ROBUST_METHODS)
+def test_fleet_robust_aggregators_train(bundle, method):
+    b = bundle
+    cfg = FleetConfig(epochs=1, batch_size=8, seed=0, aggregator=method)
+    out = run_fleet(b.model, b.train, b.specs, cfg, rounds=2,
+                    test_data=b.test, faults="byzantine_signflip")
+    assert out["aggregator"] == method
+    assert np.isfinite(out["history"][-1].test_loss)
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree.leaves(out["params"]))
+
+
+def test_robust_beats_mean_under_byzantine(bundle):
+    # sign-flip only *slows* the mean early on; the separation appears
+    # once the honest clients approach their optimum and the Byzantine
+    # bias becomes the binding constraint — hence the longer horizon
+    b = bundle
+    accs = {}
+    for agg in ("weighted_mean", "trimmed_mean", "norm_clip"):
+        cfg = FleetConfig(epochs=1, batch_size=8, seed=0, aggregator=agg)
+        out = run_fleet(b.model, b.train, b.specs, cfg, rounds=12,
+                        test_data=b.test, faults="byzantine_signflip")
+        accs[agg] = out["history"][-1].test_acc
+    assert max(accs["trimmed_mean"], accs["norm_clip"]) > accs["weighted_mean"]
+
+
+@pytest.mark.parametrize("method", ROBUST_METHODS)
+def test_async_fleet_robust_merges_train(bundle, method):
+    b = bundle
+    cfg = AsyncFleetConfig(max_updates=2, buffer_k=6, concurrency=10,
+                           epochs=1, batch_size=8, seed=0)
+    out = run_async_fleet(b.model, b.train, b.specs, cfg, test_data=b.test,
+                          aggregator=method, faults="byzantine_signflip")
+    assert out["aggregator"] == method
+    assert out["telemetry"]["n_corrupted_updates"] > 0
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree.leaves(out["params"]))
+
+
+def test_aggregator_flush_empty_buffer_is_noop():
+    params = {"w": np.ones(3, np.float32)}
+    for name, factory in AGGREGATORS.items():
+        agg = factory()
+        agg.reset()
+        assert agg.flush(params) is None, name
+
+
+def test_weighted_mean_zero_weights_falls_back():
+    params = {"w": np.ones(3, np.float32)}
+    trees = [{"w": np.full(3, 5.0, np.float32)}]
+    out = weighted_mean_params(trees, [0], weight_by_samples=True,
+                               fallback=params)
+    assert out is params
+    with pytest.raises(ValueError):
+        weighted_mean_params(trees, [0], weight_by_samples=True)
+    with pytest.raises(ValueError):
+        weighted_mean_params([], [], weight_by_samples=False)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume byte-identity
+# ---------------------------------------------------------------------------
+
+def test_fleet_resume_byte_identity(bundle, tmp_path):
+    b = bundle
+    cfg = FleetConfig(epochs=1, batch_size=8, seed=0)
+    kw = dict(test_data=b.test, faults="dropout")
+    full = run_fleet(b.model, b.train, b.specs, cfg, rounds=5,
+                     scheduler=AdaptiveParticipation(b.specs), **kw)
+    d = str(tmp_path / "fleet")
+    run_fleet(b.model, b.train, b.specs, cfg, rounds=3,
+              scheduler=AdaptiveParticipation(b.specs),
+              checkpoint_dir=d, checkpoint_every=1, **kw)
+    res = run_fleet(b.model, b.train, b.specs, cfg, rounds=5,
+                    scheduler=AdaptiveParticipation(b.specs),
+                    checkpoint_dir=d, resume=True, **kw)
+    assert _same_tree(full["params"], res["params"])
+    assert [h.__dict__ for h in full["history"]] == \
+        [h.__dict__ for h in res["history"]]
+
+
+def test_async_fleet_resume_byte_identity(bundle, tmp_path):
+    b = bundle
+    cfg = AsyncFleetConfig(max_updates=5, buffer_k=5, concurrency=10,
+                           epochs=1, batch_size=8, seed=0, eval_every=1)
+    kw = dict(test_data=b.test, faults="dropout")
+    full = run_async_fleet(b.model, b.train, b.specs, cfg,
+                           scheduler=AdaptiveParticipation(b.specs), **kw)
+    d = str(tmp_path / "async_fleet")
+    cfg_half = dataclasses.replace(cfg, max_updates=2)
+    run_async_fleet(b.model, b.train, b.specs, cfg_half,
+                    scheduler=AdaptiveParticipation(b.specs),
+                    checkpoint_dir=d, checkpoint_every=1, **kw)
+    res = run_async_fleet(b.model, b.train, b.specs, cfg,
+                          scheduler=AdaptiveParticipation(b.specs),
+                          checkpoint_dir=d, resume=True, **kw)
+    assert _same_tree(full["params"], res["params"])
+    assert full["event_log"] == res["event_log"]
+    assert [h.__dict__ for h in full["history"]] == \
+        [h.__dict__ for h in res["history"]]
+
+
+# ---------------------------------------------------------------------------
+# scenario threading
+# ---------------------------------------------------------------------------
+
+def test_scenario_faults_axis_all_runtimes(bundle):
+    b = bundle
+    kw = dict(model=b.model, clients_data=b.train, test_data=b.test,
+              rounds=2, clients_per_round=5, epochs=1, batch_size=8)
+    for runtime in ("sync", "async", "fleet", "async_fleet"):
+        out = run_scenario("uniform", runtime, faults="byzantine_signflip",
+                           aggregator="trimmed_mean", **kw)
+        assert out["faults"] == "byzantine_signflip"
+        assert all(np.all(np.isfinite(np.asarray(l)))
+                   for l in jax.tree.leaves(out["params"]))
+
+
+def test_scenario_label_skew_preserves_specs(bundle):
+    b = bundle
+    kw = dict(model=b.model, clients_data=b.train, test_data=b.test,
+              rounds=1, clients_per_round=5, epochs=1, batch_size=8)
+    a = run_scenario("uniform", "sync", **kw)
+    c = run_scenario("uniform", "sync", faults="label_skew", **kw)
+    # sizes (and hence specs/deadlines) are invariant under label skew
+    assert a["deadline"] == c["deadline"]
