@@ -45,11 +45,16 @@ bench-fleet-smoke:
 # the pre-fusion 3-dispatch chain at 1024 clients, plus the Pallas-kernel
 # on/off A-B.  --min-selection-speedup 1 is the keep-green no-regression
 # floor (the tracked BENCH_fleet.json records the real number, >= 1.5x);
-# gates on fused == pre-fusion medoid parity either way
+# gates on fused == pre-fusion medoid parity either way.  Also runs the
+# distance-free selection-memory A/B (peak RSS at M in {128, 512, 2048},
+# fresh subprocess per point): distance-free must complete M=2048 under
+# 25% of the stack path's extrapolated O(C·M²) peak and hold >=1x
+# throughput at M=128
 bench-selection:
 	JAX_PLATFORMS=cpu PYTHONPATH=src $(PY) benchmarks/fleet_sweep.py \
 		--smoke --skip-engine --skip-scenarios --skip-workloads \
-		--min-selection-speedup 1.0
+		--min-selection-speedup 1.0 --selection-memory \
+		--min-selection-memory-speedup 1.0
 
 # per-workload fleet rounds (mlp/cnn/charlm/xlstm/translm through the
 # batched fleet runtime + loop round-0 parity); recorded in

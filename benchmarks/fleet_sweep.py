@@ -20,6 +20,18 @@ Two measurements in one harness:
    ``BENCH_fleet.json["selection"]``; gates on fused == baseline
    medoids and ``--min-selection-speedup``.
 
+2b. **Selection memory** (``--selection-memory``) — peak selection RSS
+   + wall A/B of the distance-free solver vs the materializing
+   (C, M, M) stack at M ∈ {128, 512, 2048}, one fresh subprocess per
+   point (VmHWM across the cold solve; XLA's allocator retains warm
+   buffers, so reused processes can't see the peak).  The stack path is
+   skipped at the top M — its O(C·M²) peak is extrapolated from the
+   512 point — and the gates are: distance-free completes M = 2048,
+   its measured peak there stays under 25% of the extrapolated stack
+   peak, and the small-M throughput ratio holds the
+   ``--min-selection-memory-speedup`` keep-green.  Results land under
+   ``BENCH_fleet.json["selection"]["memory"]``.
+
 3. **Scenario sweep** — every named heterogeneity regime from
    ``repro.fed.fleet.scenarios`` driven through BOTH the synchronous
    server and the async event runtime at smoke scale, so regressions in
@@ -131,7 +143,12 @@ def bench_selection(n_clients: int, epochs: int, batch_size: int,
     path); the unfused baseline replays the dispatch chain this PR
     replaced (jitted feature pass, jitted pairwise program, eager
     diagonal fix-up, jitted legacy-sweep solve).  Warm wall clocks are
-    min-over-reps; parity requires identical medoid indices.
+    min-over-reps; parity requires identical medoid indices — exact
+    equality holds because the fused path's distance-free selection
+    materializes below the adaptive ``FleetConfig.materialize_below``
+    cutover, which these fleet-sized groups (M < 256) always are (the
+    streaming solver is only cost-tied, not bit-identical; its parity
+    gate is ``tests/test_distance_free.py``).
     """
     from repro.kernels.ops import resolve_use_kernel
     model, _, _, cfg, _, params, groups, _ = _engine_workload(
@@ -196,6 +213,164 @@ def bench_selection(n_clients: int, epochs: int, batch_size: int,
                       # "on" = interpret mode, which is why auto picks off)
                       "on_over_off_wall_ratio": ab["on"] / ab["off"]},
         "parity_medoids_equal": bool(meds_equal),
+    }
+
+
+SELECTION_MEMORY_MS = (128, 512, 2048)
+
+
+def _vm_hwm_bytes() -> int:
+    """Peak resident set (VmHWM) of this process, in bytes (-1 off-Linux)."""
+    try:
+        with open("/proc/self/status") as f:
+            for ln in f:
+                if ln.startswith("VmHWM:"):
+                    return int(ln.split()[1]) * 1024
+    except OSError:
+        pass
+    return -1
+
+
+def selection_memory_worker(variant: str, m: int, c: int, f: int, k: int,
+                            reps: int) -> Dict:
+    """One (variant, M) selection-memory point, run in a fresh process.
+
+    Peak selection memory is only observable *cold*: XLA's host allocator
+    retains warm buffers, so a warm re-solve in a reused process shows a
+    zero RSS delta.  Each point therefore re-execs this script and
+    measures VmHWM across the first solve (baseline read after the input
+    stack is resident, so the delta is the solver's working set plus its
+    one-time compile).  ``variant``: ``dfree`` is the shipped default
+    (``distance_free=True`` with the adaptive materialize-below-256
+    cutover), ``stack`` forces the materializing (C, M, M) baseline.
+    Prints a RESULT: JSON line for the parent to parse."""
+    import jax.numpy as jnp
+    from repro.core.coreset import build_coreset_batched
+
+    rng = np.random.default_rng(1234 + m)
+    x = rng.normal(size=(c, m, f)).astype(np.float32)
+    valid = np.ones((c, m), bool)
+    valid[:, m - max(m // 8, 1):] = False   # engine-style padded tail rows
+    x[~valid] = 0.0
+    feats = jnp.asarray(x)
+    vj = jnp.asarray(valid)
+    jax.block_until_ready(feats)
+    distance_free = variant == "dfree"
+
+    def solve():
+        res = build_coreset_batched(feats, vj, k,
+                                    distance_free=distance_free,
+                                    max_sweeps=4)
+        jax.block_until_ready(res.indices)
+        return res
+
+    base = _vm_hwm_bytes()
+    t0 = time.perf_counter()
+    solve()
+    cold = time.perf_counter() - t0
+    peak = _vm_hwm_bytes()
+    warm = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        solve()
+        dt = time.perf_counter() - t0
+        warm = dt if warm is None else min(warm, dt)
+    result = {
+        "variant": variant, "m": m, "c": c, "f": f, "k": k,
+        "completed": True,
+        "cold_wall_s": cold,
+        "warm_wall_s": warm,
+        "baseline_rss_bytes": base,
+        "peak_rss_delta_bytes": max(peak - base, 0),
+    }
+    print("RESULT:" + json.dumps(result))
+    return result
+
+
+def bench_selection_memory(c: int = 16, f: int = 32, k: int = 16,
+                           reps: int = 3, ms=SELECTION_MEMORY_MS) -> Dict:
+    """Peak selection memory + large-M throughput A/B (distance-free vs
+    materializing stack), one fresh subprocess per point.
+
+    The materializing path is measured up to M = 512 and *skipped* at the
+    top M — its (C, M, M) working set extrapolates as O(C·M²) from the
+    measured 512 point (16x at 2048), which is exactly the wall the
+    distance-free path removes; running it would need ~1 GB at the
+    default C = 16 and OOM on smaller CI boxes.  Gates (applied by
+    ``main``): the distance-free path must *complete* the top M; its
+    measured peak there must stay under 25% of the stack path's
+    extrapolated peak; and at the smallest M (below the adaptive
+    materialize cutover, where both variants run the same program) the
+    distance-free warm wall must hold the keep-green ≥1x throughput
+    ratio."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    m_max = max(ms)
+    points: List[Dict] = []
+    for m in sorted(ms):
+        for variant in ("stack", "dfree"):
+            if variant == "stack" and m >= m_max and len(ms) > 1:
+                points.append({
+                    "variant": variant, "m": m, "c": c, "f": f, "k": k,
+                    "completed": False, "skipped": True,
+                    "skip_reason": "O(C*M^2) stack at the top M is the "
+                                   "wall being measured; peak is "
+                                   "extrapolated from the 512 point",
+                })
+                print(f"  [stack ] M={m:5d}: skipped (extrapolated)")
+                continue
+            cmd = [sys.executable, os.path.abspath(__file__),
+                   "--selection-memory-worker", "--sm-variant", variant,
+                   "--sm-m", str(m), "--sm-clients", str(c),
+                   "--sm-f", str(f), "--sm-k", str(k),
+                   "--sm-reps", str(reps)]
+            proc = subprocess.run(cmd, env=forced_host_device_env(1, repo),
+                                  capture_output=True, text=True)
+            line = next((ln for ln in proc.stdout.splitlines()
+                         if ln.startswith("RESULT:")), None)
+            if proc.returncode != 0 or line is None:
+                row = {"variant": variant, "m": m, "c": c, "f": f, "k": k,
+                       "completed": False, "skipped": False,
+                       "error": (proc.stderr or proc.stdout)[-2000:]}
+                print(f"  [{variant:6s}] M={m:5d}: FAILED")
+            else:
+                row = json.loads(line[len("RESULT:"):])
+                row["skipped"] = False
+                print(f"  [{variant:6s}] M={m:5d}: peak "
+                      f"{row['peak_rss_delta_bytes'] / 1e6:8.1f} MB  "
+                      f"cold {row['cold_wall_s']:.2f}s  "
+                      f"warm {row['warm_wall_s']:.3f}s")
+            points.append(row)
+
+    def pick(variant, m):
+        return next((p for p in points
+                     if p["variant"] == variant and p["m"] == m), None)
+
+    m_small, m_mid = min(ms), sorted(ms)[-2] if len(ms) > 1 else min(ms)
+    stack_mid = pick("stack", m_mid)
+    dfree_top = pick("dfree", m_max)
+    d128, s128 = pick("dfree", m_small), pick("stack", m_small)
+    extrapolated = None
+    peak_ratio = None
+    if stack_mid and stack_mid.get("completed"):
+        extrapolated = (stack_mid["peak_rss_delta_bytes"]
+                        * (m_max / m_mid) ** 2)
+        if dfree_top and dfree_top.get("completed"):
+            peak_ratio = dfree_top["peak_rss_delta_bytes"] / extrapolated
+    speedup_small = None
+    if (d128 and s128 and d128.get("completed") and s128.get("completed")):
+        speedup_small = s128["warm_wall_s"] / d128["warm_wall_s"]
+    return {
+        "points": points,
+        "m_values": sorted(ms),
+        "dfree_completed_top_m": bool(dfree_top
+                                      and dfree_top.get("completed")),
+        "top_m": m_max,
+        "stack_peak_extrapolated_bytes": extrapolated,
+        "dfree_top_peak_bytes": (dfree_top or {}).get(
+            "peak_rss_delta_bytes"),
+        "peak_ratio_vs_extrapolated_stack": peak_ratio,
+        "small_m": m_small,
+        "small_m_dfree_speedup": speedup_small,
     }
 
 
@@ -879,10 +1054,39 @@ def main(argv=None) -> int:
                     help="fail if max-vs-min device throughput gain falls "
                          "below this (0 = record only; CPU wall-clock "
                          "scaling is bounded by physical cores)")
+    ap.add_argument("--selection-memory", action="store_true",
+                    help="peak selection memory + large-M throughput A/B: "
+                         "distance-free vs materializing (C, M, M) stack "
+                         "at M in {128, 512, 2048}, one fresh subprocess "
+                         "per point (VmHWM across the cold solve); "
+                         "results land in BENCH_fleet.json['selection']"
+                         "['memory']")
+    ap.add_argument("--min-selection-memory-speedup", type=float,
+                    default=1.0,
+                    help="fail if the distance-free warm wall at the "
+                         "smallest memory-sweep M falls below this ratio "
+                         "of the stack path's (1.0 = keep-green; below "
+                         "the adaptive cutover both variants run the "
+                         "same program, so this guards the cutover "
+                         "default; 5%% timer-jitter tolerance applied)")
     ap.add_argument("--sharded-worker", action="store_true",
                     help=argparse.SUPPRESS)   # internal: one sweep point
     ap.add_argument("--parity", action="store_true",
                     help=argparse.SUPPRESS)   # worker: also check parity
+    ap.add_argument("--selection-memory-worker", action="store_true",
+                    help=argparse.SUPPRESS)   # internal: one memory point
+    ap.add_argument("--sm-variant", choices=("dfree", "stack"),
+                    default="dfree", help=argparse.SUPPRESS)
+    ap.add_argument("--sm-m", type=int, default=512,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--sm-clients", type=int, default=16,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--sm-f", type=int, default=32,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--sm-k", type=int, default=16,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--sm-reps", type=int, default=3,
+                    help=argparse.SUPPRESS)
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(os.path.abspath(__file__)), "BENCH_fleet.json"))
     ap.add_argument("--verbose", action="store_true")
@@ -891,6 +1095,11 @@ def main(argv=None) -> int:
     if args.sharded_worker:
         sharded_worker(args.clients or 512, args.epochs or 3,
                        args.batch_size, args.seed, parity=args.parity)
+        return 0
+    if args.selection_memory_worker:
+        selection_memory_worker(args.sm_variant, args.sm_m,
+                                args.sm_clients, args.sm_f, args.sm_k,
+                                args.sm_reps)
         return 0
 
     n_clients = args.clients or 1024
@@ -956,6 +1165,38 @@ def main(argv=None) -> int:
               f"{sel['selection_speedup']:.2f}x >= "
               f"{args.min_selection_speedup:.1f}x")
         ok = ok and sel_parity and sel_fast
+
+    if args.selection_memory:
+        print("\n== selection-memory: peak RSS + wall A/B, distance-free "
+              "vs materializing (C, M, M) stack (fresh subprocess per "
+              "point)")
+        mem = bench_selection_memory()
+        report.setdefault("selection", {})["memory"] = mem
+        completes = mem["dfree_completed_top_m"]
+        print(f"  [{'PASS' if completes else 'FAIL'}] distance-free "
+              f"completes M={mem['top_m']} (stack path skipped there)")
+        ratio = mem["peak_ratio_vs_extrapolated_stack"]
+        under = ratio is not None and ratio < 0.25
+        if ratio is not None:
+            print(f"  [{'PASS' if under else 'FAIL'}] peak at "
+                  f"M={mem['top_m']}: "
+                  f"{mem['dfree_top_peak_bytes'] / 1e6:.1f} MB = "
+                  f"{100.0 * ratio:.1f}% of the stack path's "
+                  f"extrapolated "
+                  f"{mem['stack_peak_extrapolated_bytes'] / 1e6:.1f} MB "
+                  f"(< 25%)")
+        else:
+            print("  [FAIL] stack baseline point missing — no "
+                  "extrapolation")
+        sp = mem["small_m_dfree_speedup"]
+        floor = args.min_selection_memory_speedup - 0.05
+        keep_green = sp is not None and sp >= floor
+        print(f"  [{'PASS' if keep_green else 'FAIL'}] M="
+              f"{mem['small_m']} throughput: distance-free "
+              f"{sp if sp is not None else float('nan'):.2f}x the stack "
+              f"path >= {args.min_selection_memory_speedup:.1f}x "
+              f"keep-green (5% jitter tolerance)")
+        ok = ok and completes and under and keep_green
 
     if args.async_fleet:
         print(f"\n== async_fleet: event-driven engine at {n_clients} "

@@ -22,8 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.kmedoids import (KMedoidsResult, kmedoids_batched,
-                                 kmedoids_jax, kmedoids_numpy,
-                                 pairwise_sq_dists)
+                                 kmedoids_batched_from_feats, kmedoids_jax,
+                                 kmedoids_numpy, pairwise_sq_dists)
 
 
 class Coreset(NamedTuple):
@@ -89,7 +89,9 @@ def build_coreset(features: jnp.ndarray, budget: int, *,
 
 def build_coreset_batched(features: jnp.ndarray, valid: jnp.ndarray,
                           budget: int, *, use_kernel: Optional[bool] = None,
-                          max_sweeps: int = 50) -> Coreset:
+                          max_sweeps: int = 50,
+                          distance_free: bool = True,
+                          materialize_below: int = 256) -> Coreset:
     """One coreset per client over a padded cohort stack (fleet engine).
 
     features: (C, M, F) per-client gradient features, rows with
@@ -98,18 +100,42 @@ def build_coreset_batched(features: jnp.ndarray, valid: jnp.ndarray,
     ``Coreset`` of stacked fields — indices (C, k), weights (C, k), etc.
     Each lane solves exactly the instance ``build_coreset`` would solve on
     that client's unpadded features.  ``use_kernel`` (tri-state, None =
-    auto by backend) routes the distance stack and the fused BUILD/Δ-sweep
-    reductions through the Pallas kernels.
+    auto by backend) routes the distance/reduction math through the Pallas
+    kernels.
+
+    ``distance_free`` (default on) solves straight from the feature stack
+    — the (C, M, M) distance tensor is never materialized, so peak
+    selection memory is O(C·M·F) instead of O(C·M²) and per-client M
+    scales to the thousands.  ``distance_free=False`` keeps the
+    materializing pairwise + D-input solver as the measured A/B baseline
+    (``benchmarks/fleet_sweep.py --selection-memory``).
+
+    ``materialize_below`` is the adaptive cutover: below it the (C, M, M)
+    stack is a few MB and recomputing distances every BUILD step /
+    Δ-sweep costs more than it saves (streaming trades O(k·C·M²·F)
+    recompute FLOPs for O(C·M²) memory), so ``distance_free=True``
+    materializes anyway — selection at typical fleet M is bit-identical
+    to the D-input path.  At ``M >= materialize_below`` it streams.
+    Pass ``materialize_below=0`` to force streaming at any size (the
+    parity tests do).
     """
     from repro.kernels.ops import pairwise_l2_batched, resolve_use_kernel
     c, m, _ = features.shape
     budget = min(budget, m)
     uk = resolve_use_kernel(use_kernel)
-    # zero_diag: the pairwise wrappers own the self-distance diagonal fix-up
-    D = pairwise_l2_batched(features, squared=False, use_kernel=uk,
-                            zero_diag=True)
-    res = kmedoids_batched(D, valid, budget, max_sweeps=max_sweeps,
-                           use_kernel=uk)
+    if distance_free and m >= materialize_below:
+        # padded rows must be zero features: mutually-zero distances are
+        # masked in-kernel (+BIG candidates), valid rows are untouched
+        feats = features * valid.astype(features.dtype)[..., None]
+        res = kmedoids_batched_from_feats(feats, valid, budget,
+                                          max_sweeps=max_sweeps,
+                                          use_kernel=uk)
+    else:
+        # zero_diag: the pairwise wrappers own the self-distance fix-up
+        D = pairwise_l2_batched(features, squared=False, use_kernel=uk,
+                                zero_diag=True)
+        res = kmedoids_batched(D, valid, budget, max_sweeps=max_sweeps,
+                               use_kernel=uk)
     return Coreset(indices=res.medoids,
                    weights=res.weights.astype(jnp.float32),
                    objective=res.objective,

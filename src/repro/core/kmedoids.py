@@ -250,6 +250,152 @@ def kmedoids_batched(D: jnp.ndarray, valid: jnp.ndarray, k: int,
                              bool(legacy_sweep))
 
 
+# ---------------------------------------------------------------------------
+# distance-free solver: same BUILD+SWAP control flow, D never materialized
+# ---------------------------------------------------------------------------
+
+def _col_dists(xf: jnp.ndarray, sq: jnp.ndarray,
+               idx: jnp.ndarray) -> jnp.ndarray:
+    """(C, M) distances of every row to column idx[c], rebuilt from feats.
+
+    Exact zero pinned at the self index (the ``zero_self_diag`` contract,
+    one column at a time)."""
+    m = xf.shape[1]
+    xc = jnp.take_along_axis(xf, idx[:, None, None], axis=1)   # (C, 1, F)
+    sqc = jnp.take_along_axis(sq, idx[:, None], axis=1)        # (C, 1)
+    d2 = sq + sqc - 2.0 * jnp.sum(xf * xc, axis=-1)
+    d = jnp.sqrt(jnp.maximum(d2, 0.0))
+    return jnp.where(jnp.arange(m, dtype=jnp.int32)[None] == idx[:, None],
+                     0.0, d)
+
+
+def _medoid_dists(xf: jnp.ndarray, sq: jnp.ndarray,
+                  medoids: jnp.ndarray) -> jnp.ndarray:
+    """(C, M, k) distances to the current medoid set, rebuilt from feats."""
+    m = xf.shape[1]
+    xm = jnp.take_along_axis(xf, medoids[:, :, None], axis=1)  # (C, k, F)
+    sqm = jnp.take_along_axis(sq, medoids, axis=1)             # (C, k)
+    d2 = (sq[..., None] + sqm[:, None, :]
+          - 2.0 * jnp.einsum("cmf,ckf->cmk", xf, xm))
+    d = jnp.sqrt(jnp.maximum(d2, 0.0))
+    self_mask = (jnp.arange(m, dtype=jnp.int32)[None, :, None]
+                 == medoids[:, None, :])
+    return jnp.where(self_mask, 0.0, d)
+
+
+@partial(jax.jit, static_argnames=("k", "max_sweeps", "use_kernel"))
+def _kmedoids_batched_from_feats(feats: jnp.ndarray, valid: jnp.ndarray,
+                                 k: int, max_sweeps: int,
+                                 use_kernel: bool) -> KMedoidsResult:
+    from repro.kernels.ops import (kmedoids_build_cost_from_feats,
+                                   kmedoids_delta_sweep_from_feats)
+
+    xf = feats.astype(jnp.float32)
+    c, m = xf.shape[0], xf.shape[1]
+    sq = jnp.sum(xf * xf, axis=-1)          # (C, M) squared norms, once
+    vf = valid.astype(jnp.float32)
+    invalid = ~valid.astype(bool)
+    iota_m = jnp.arange(m, dtype=jnp.int32)
+
+    # ---- BUILD: identical greedy to _kmedoids_batched; the add-cost
+    # reduction consumes feature tiles and the per-pick d_near update is a
+    # single rebuilt column — never a (C, M, M) stack.
+    def add_cost(d_near):
+        return kmedoids_build_cost_from_feats(xf, d_near, vf,
+                                              use_kernel=use_kernel)
+
+    cost0 = jnp.where(invalid, BIG, add_cost(jnp.full((c, m), BIG,
+                                                      jnp.float32)))
+    first = jnp.argmin(cost0, axis=1).astype(jnp.int32)            # (C,)
+    d_near0 = _col_dists(xf, sq, first)
+
+    def build_step(carry, _):
+        d_near, chosen = carry
+        cost = jnp.where(chosen | invalid, BIG, add_cost(d_near))
+        nxt = jnp.argmin(cost, axis=1).astype(jnp.int32)
+        d_near = jnp.minimum(d_near, _col_dists(xf, sq, nxt))
+        chosen = chosen | (iota_m[None] == nxt[:, None])
+        return (d_near, chosen), nxt
+
+    mask0 = iota_m[None] == first[:, None]
+    if k > 1:
+        (_, _), rest = jax.lax.scan(build_step, (d_near0, mask0), None,
+                                    length=k - 1)
+        medoids0 = jnp.concatenate([first[:, None], rest.T], axis=1)
+    else:
+        medoids0 = first[:, None]
+
+    # ---- SWAP: d1/d2/n(i) come from the O(C·M·k) medoid-distance slab;
+    # the Δ reductions stream feature tiles.
+    def sweep(state):
+        medoids, _, it = state
+        dm = _medoid_dists(xf, sq, medoids)                       # (C, M, k)
+        d1 = jnp.min(dm, axis=-1)
+        n_idx = jnp.argmin(dm, axis=-1).astype(jnp.int32)
+        n_onehot = (jnp.arange(k, dtype=jnp.int32)[None, None]
+                    == n_idx[..., None])
+        d2 = jnp.min(jnp.where(n_onehot, BIG, dm), axis=-1)
+        A, B = kmedoids_delta_sweep_from_feats(xf, d1, d2, vf,
+                                               n_onehot.astype(jnp.float32),
+                                               use_kernel=use_kernel)
+        delta = A[..., None] + B                                  # (C, M, k)
+        is_medoid = (iota_m[None, :, None] == medoids[:, None, :]).any(-1)
+        delta = jnp.where((is_medoid | invalid)[..., None], BIG, delta)
+        flat = jnp.argmin(delta.reshape(c, m * k), axis=1)
+        best = jnp.take_along_axis(delta.reshape(c, m * k), flat[:, None],
+                                   axis=1)[:, 0]
+        j = (flat // k).astype(jnp.int32)
+        l = (flat % k).astype(jnp.int32)
+        swapped = jnp.where(jnp.arange(k, dtype=jnp.int32)[None]
+                            == l[:, None], j[:, None], medoids)
+        medoids = jnp.where((best < -1e-6)[:, None], swapped, medoids)
+        return medoids, best, it + 1
+
+    def cond(state):
+        _, best, it = state
+        return jnp.any(best < -1e-6) & (it < max_sweeps)
+
+    state = (medoids0.astype(jnp.int32),
+             jnp.full((c,), -jnp.inf, jnp.float32),
+             jnp.asarray(0, jnp.int32))
+    medoids, _, _ = jax.lax.while_loop(cond, sweep, state)
+
+    dm = _medoid_dists(xf, sq, medoids)
+    assignment = jnp.where(valid, jnp.argmin(dm, axis=-1),
+                           -1).astype(jnp.int32)
+    weights = jnp.sum(jax.nn.one_hot(assignment, k, dtype=jnp.int32), axis=1)
+    objective = jnp.sum(jnp.min(dm, axis=-1) * vf, axis=1)
+    return KMedoidsResult(medoids.astype(jnp.int32), assignment, weights,
+                          objective)
+
+
+def kmedoids_batched_from_feats(feats: jnp.ndarray, valid: jnp.ndarray,
+                                k: int, max_sweeps: int = 50,
+                                use_kernel: Optional[bool] = None
+                                ) -> KMedoidsResult:
+    """Distance-free twin of :func:`kmedoids_batched`.
+
+    feats: (C, M, F) per-client feature stack; valid: (C, M) masks.  Same
+    BUILD+SWAP control flow and masking contract, but the (C, M, M)
+    distance stack is never materialized: the BUILD add-cost and Δ-sweep
+    reductions consume feature tiles (Pallas kernels or the chunked jnp
+    fallback under the tri-state ``use_kernel``), and the only per-round
+    distance tensors are O(C·M) columns and the O(C·M·k) medoid slab.
+    Peak selection memory drops from O(C·M²) to O(C·M·(F + k)) — per-
+    client M in the thousands instead of hundreds.
+
+    Padded lanes (valid False) carry zero feature rows, which are
+    mutually at distance 0; the from-feats reductions mask those
+    candidates to +BIG **in-kernel** so they can never tie-win a medoid
+    election over a valid point.
+    """
+    from repro.kernels.ops import resolve_use_kernel
+    return _kmedoids_batched_from_feats(feats, valid,
+                                        min(int(k), feats.shape[1]),
+                                        int(max_sweeps),
+                                        resolve_use_kernel(use_kernel))
+
+
 def kmedoids_masked(D: jnp.ndarray, valid: jnp.ndarray, k: int,
                     max_sweeps: int = 50,
                     use_kernel: Optional[bool] = None) -> KMedoidsResult:

@@ -100,6 +100,11 @@ class AsyncFleetConfig:
     batch_size: int = 8
     lr: float = 0.05
     use_kernel: Optional[bool] = None   # tri-state Pallas switch
+    # distance-free selection (see FleetConfig.distance_free): default on,
+    # False keeps the materializing (C, M, M) path as the A/B baseline;
+    # materialize_below is the adaptive small-M cutover
+    distance_free: bool = True
+    materialize_below: int = 256
     max_sweeps: int = 25
     weight_by_samples: bool = True
     straggler_pct: float = 30.0
@@ -117,6 +122,8 @@ class AsyncFleetConfig:
         (same perms, same padding, same group programs)."""
         return FleetConfig(epochs=self.epochs, batch_size=self.batch_size,
                            lr=self.lr, use_kernel=self.use_kernel,
+                           distance_free=self.distance_free,
+                           materialize_below=self.materialize_below,
                            max_sweeps=self.max_sweeps,
                            weight_by_samples=self.weight_by_samples,
                            seed=self.seed, cost=self.cost)

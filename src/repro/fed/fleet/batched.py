@@ -9,10 +9,14 @@ XLA programs:
 
   * clients are padded into **cohort groups** keyed by (padded size M,
     quantized coreset budget k): every client in a group shares static
-    shapes, so local SGD, gradient-feature extraction, the pairwise
-    distance stack (one (C, M, M) tensor per group, optionally via the
-    batched Pallas ``pairwise_l2`` kernel), and masked k-medoids all
-    ``vmap`` over the client axis;
+    shapes, so local SGD, gradient-feature extraction, and masked
+    k-medoids all ``vmap`` over the client axis — selection is
+    **distance-free** by default (the BUILD/Δ-sweep reductions consume
+    the (C, M, F) feature stack via the feature-tiled Pallas kernels; no
+    (C, M, M) distance tensor is ever materialized, so per-client M
+    scales to the thousands), with ``FleetConfig.distance_free=False``
+    keeping the materializing pairwise + D-input solver as the measured
+    baseline;
   * per-client randomness (epoch permutations) is drawn host-side from
     ``(seed, round, cid)`` streams, so results are a pure function of the
     seed regardless of grouping or execution order;
@@ -70,6 +74,18 @@ class FleetConfig:
     # + fused BUILD/Δ-sweep reductions): None = auto (kernels on supported
     # backends, jnp fallback otherwise); True/False force on/off
     use_kernel: Optional[bool] = None
+    # distance-free selection (default on): the group program's k-medoids
+    # reductions consume the (C, M, F) feature stack directly and the
+    # (C, M, M) distance tensor is never materialized — O(C·M·F) peak
+    # selection memory, per-client M in the thousands.  False keeps the
+    # materializing pairwise + D-input solver as the A/B baseline
+    # (benchmarks/fleet_sweep.py --selection-memory).
+    distance_free: bool = True
+    # adaptive cutover for distance_free: below this M the (C, M, M)
+    # stack is cheap and streaming's recompute FLOPs cost more than the
+    # memory saves, so selection materializes anyway (bit-identical to
+    # the D-input path).  0 forces streaming at any size.
+    materialize_below: int = 256
     max_sweeps: int = 25          # k-medoids swap sweeps
     weight_by_samples: bool = True  # aggregate ∝ mⁱ (fleet cohorts are not
     # sampled ∝ mⁱ, so size weighting is the unbiased choice here)
@@ -384,7 +400,9 @@ class FleetEngine:
             feats = vm_feats(params, data)                 # (C, M, F)
             coreset = build_coreset_batched(
                 feats, valid, k, use_kernel=cfg.use_kernel,
-                max_sweeps=cfg.max_sweeps)
+                max_sweeps=cfg.max_sweeps,
+                distance_free=cfg.distance_free,
+                materialize_below=cfg.materialize_below)
             p, _ = vm_sgd(p0, data, w, idx1)
             cdata = jax.tree.map(
                 lambda v: vm_gather(v, coreset.indices), data)  # (C, k, ...)
@@ -420,7 +438,9 @@ class FleetEngine:
                 feats = vm_feats(params, data)
                 return build_coreset_batched(
                     feats, valid, k, use_kernel=cfg.use_kernel,
-                    max_sweeps=cfg.max_sweeps)
+                    max_sweeps=cfg.max_sweeps,
+                    distance_free=cfg.distance_free,
+                    materialize_below=cfg.materialize_below)
             return jax.jit(select)
         return self._cached_program(self._select_programs, (k, data_treedef),
                                     build, "select")
@@ -430,12 +450,14 @@ class FleetEngine:
         """Run one straggler group's selection phase; returns
         (``Coreset`` of stacked fields, dispatches issued).
 
-        ``fused=True`` is the fast path: one jitted program.
-        ``fused=False`` replays the pre-fusion dispatch chain this PR
-        replaced — a jitted feature pass, a jitted pairwise program, an
-        eager diagonal fix-up, and a jitted legacy-sweep k-medoids solve,
-        with the host walking results between them — as the selection
-        benchmark's A/B baseline.
+        ``fused=True`` is the fast path: one jitted program (distance-free
+        by default — no (C, M, M) intermediate).  ``fused=False`` replays
+        the pre-fusion dispatch chain — a jitted feature pass, a jitted
+        pairwise program (diagonal fix-up folded in via ``zero_diag``;
+        the eager ``D * (1 − eye)`` epilogue it replaced allocated a
+        second (C, M, M) tensor), and a jitted legacy-sweep k-medoids
+        solve, with the host walking results between them — as the
+        selection benchmark's A/B baseline.
         """
         if group.k == 0:
             raise ValueError("group has no selection phase (k == 0)")
@@ -457,10 +479,11 @@ class FleetEngine:
         with obs.span("grad_features", k=group.k):
             feats = self._feats(params, data)              # dispatch 1
         with obs.span("distances", k=group.k):
+            # zero_diag folds the self-distance fix-up into the jitted
+            # pairwise program — the eager `D * (1 - eye)` epilogue it
+            # replaces allocated a second (C, M, M) tensor per group
             D = pairwise_l2_batched(feats, squared=False,  # dispatch 2
-                                    use_kernel=False)
-            m = D.shape[-1]
-            D = D * (1.0 - jnp.eye(m, dtype=D.dtype))[None]  # eager epilogue
+                                    use_kernel=False, zero_diag=True)
         with obs.span("selection", k=group.k, fused=False):
             res = kmedoids_batched(D, valid, group.k,      # dispatch 3
                                    max_sweeps=cfg.max_sweeps,
@@ -564,7 +587,9 @@ class FleetEngine:
         self.count_dispatch()
         coreset = build_coreset_batched(
             feats[None], jnp.asarray(group.valid[c:c + 1]), group.k,
-            use_kernel=cfg.use_kernel, max_sweeps=cfg.max_sweeps)
+            use_kernel=cfg.use_kernel, max_sweeps=cfg.max_sweeps,
+            distance_free=cfg.distance_free,
+            materialize_below=cfg.materialize_below)
         p, _ = run_epoch(params, 0)
         med = np.asarray(coreset.indices[0])
         mix = jnp.asarray(med)

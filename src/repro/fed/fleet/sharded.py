@@ -5,8 +5,10 @@ round from a per-client Python loop into a handful of vmapped XLA
 programs — but every one of those programs still runs on a single
 device.  This module shards the *client axis* of each ``CohortGroup``
 across a 1-D device mesh with ``shard_map``: local SGD, gradient-feature
-extraction, the (batched Pallas) pairwise-distance stacks, and masked
-k-medoids all execute on ``C / n_devices`` client lanes per device, and
+extraction, and masked k-medoids (distance-free by default — the
+feature-tiled selection reductions, no per-device (C, M, M) stack; see
+``FleetConfig.distance_free``) all execute on ``C / n_devices`` client
+lanes per device, and
 the round's weighted parameter aggregation happens as a **psum tree**
 inside the same program — no per-group host round-trip, no host-side
 accumulation loop.

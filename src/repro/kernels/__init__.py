@@ -16,6 +16,19 @@ single launch replaces):
   — one FasterPAM swap sweep's A_j and B_{j,l} reductions in a single
   pass over D (replacing the 3+-pass ``minimum``/``one_hot``/``einsum``
   chain), with the per-tile one-hot segment matmul on the MXU.
+* ``kmedoids_pallas.build_cost_from_feats_pallas`` →
+  ``ops.kmedoids_build_cost_from_feats`` — the **distance-free** BUILD
+  add-cost: pairwise distances recomputed on the fly from the (C, M, F)
+  feature stack, flash-attention-style (F-dim tiled into a VMEM dot
+  accumulator, distance epilogue at the last F-step), so the (C, M, M)
+  tensor D never exists.  Peak selection memory drops from O(C·M²) to
+  O(C·M·F) — per-client M in the thousands instead of hundreds —
+  with padded lanes masked to +1e30 in-kernel so zero-padded rows
+  (mutually at distance 0) can never win a medoid election.
+* ``kmedoids_pallas.delta_sweep_from_feats_pallas`` →
+  ``ops.kmedoids_delta_sweep_from_feats`` — the distance-free FasterPAM
+  Δ-sweep: same on-the-fly distance tiles feeding the A_j / B_{j,l}
+  fold, same single launch per sweep.
 * ``flash_attention`` → ``ops.flash_attention`` — GQA causal/windowed
   flash attention (softmax streamed, scores never materialized).
 * ``rmsnorm`` → ``ops.rmsnorm`` — fused RMSNorm over the last axis.

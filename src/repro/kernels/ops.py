@@ -15,7 +15,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.kmedoids_pallas import build_cost_pallas, delta_sweep_pallas
+from repro.kernels.kmedoids_pallas import (build_cost_from_feats_pallas,
+                                           build_cost_pallas,
+                                           delta_sweep_from_feats_pallas,
+                                           delta_sweep_pallas)
 from repro.kernels.pairwise_l2 import (pairwise_l2_batched_pallas,
                                        pairwise_l2_pallas)
 from repro.kernels.rmsnorm import rmsnorm_pallas
@@ -220,6 +223,169 @@ def kmedoids_delta_sweep(D, d1, d2, vf, n_onehot, *, use_kernel: bool = True,
     ohp, _ = _pad_to(ohp, 2, k_pad)
     A, B = delta_sweep_pallas(Dp, d1p, d2p, vfp, ohp, block_m=block_m,
                               interpret=interpret)
+    return A[:, :m], B[:, :m, :k]
+
+
+_BIG = 1e30      # candidate mask for padded lanes (matches core.kmedoids.BIG)
+
+
+def _feat_blocks(m: int, f: int, block_m: int, block_k: int,
+                 interpret: bool):
+    """(block_m, block_k, f_multiple) for the feature-tiled kernels.
+
+    The stack-path wrappers shrink block_m to the problem in interpret
+    mode but always pad F up to 128, so a tiny cohort group (M = 32,
+    F = 16) paid pow2 padding waste twice — once in M, once in F.  Here
+    interpret mode sizes BOTH tiles to the problem (pow2, floor 8) and
+    pads F only up to the shrunk tile; compiled TPU kernels keep the
+    lane-aligned 128-multiple on F (Mosaic's float32 lane requirement)
+    and the MXU-sized block_m.
+    """
+    bm = _pow2_block(m, block_m, shrink=interpret)
+    if interpret:
+        bk = _pow2_block(f, block_k, shrink=True)
+        return bm, bk, bk
+    fp = -(-f // 128) * 128
+    bk = min(block_k, fp)
+    while fp % bk:
+        bk //= 2
+    return bm, bk, 128
+
+
+def _feats_dist_chunk(xf, sq, j0, chunk):
+    """(C, M, chunk) distance slab for candidate columns [j0, j0+chunk).
+
+    Exact-zero diagonal pinned via global row/col index comparison (the
+    chunked analogue of ``zero_self_diag``).
+    """
+    xj = jax.lax.dynamic_slice_in_dim(xf, j0, chunk, axis=1)
+    sqj = jax.lax.dynamic_slice_in_dim(sq, j0, chunk, axis=1)
+    d2 = (sq[..., :, None] + sqj[..., None, :]
+          - 2.0 * jnp.einsum("cif,cjf->cij", xf, xj))
+    d = jnp.sqrt(jnp.maximum(d2, 0.0))
+    rows = jnp.arange(xf.shape[1])[None, :, None]
+    cols = (j0 + jnp.arange(chunk))[None, None, :]
+    return jnp.where(rows == cols, 0.0, d)
+
+
+def _feats_prep_chunked(x, chunk: int):
+    """Pad M to a chunk multiple and precompute fp32 features + sq norms."""
+    m = x.shape[1]
+    chunk = min(chunk, _pow2_block(m, chunk, shrink=True))
+    xp, _ = _pad_to(x, 1, chunk)
+    xf = xp.astype(jnp.float32)
+    sq = jnp.sum(xf * xf, axis=-1)
+    starts = jnp.arange(0, xp.shape[1], chunk)
+    return xf, sq, starts, chunk, m
+
+
+def _build_cost_from_feats_jnp(x, d_near, vf, *, chunk: int):
+    """O(C·M·chunk) jnp fallback: lax.map over candidate-column chunks."""
+    xf, sq, starts, chunk, m = _feats_prep_chunked(x, chunk)
+    vfp, _ = _pad_to(vf, 1, chunk)
+    dnp, _ = _pad_to(d_near, 1, chunk)
+
+    def body(j0):
+        d = _feats_dist_chunk(xf, sq, j0, chunk)
+        cost = jnp.sum(jnp.minimum(dnp[..., None], d)
+                       * vfp[..., None], axis=-2)
+        vfj = jax.lax.dynamic_slice_in_dim(vfp, j0, chunk, axis=1)
+        return jnp.where(vfj > 0.0, cost, _BIG)
+
+    out = jax.lax.map(body, starts)               # (n_chunks, C, chunk)
+    return jnp.moveaxis(out, 0, 1).reshape(x.shape[0], -1)[:, :m]
+
+
+def _delta_sweep_from_feats_jnp(x, d1, d2, vf, n_onehot, *, chunk: int):
+    """O(C·M·chunk) jnp fallback for the Δ-sweep reductions."""
+    xf, sq, starts, chunk, m = _feats_prep_chunked(x, chunk)
+    vfp, _ = _pad_to(vf, 1, chunk)
+    ohp, _ = _pad_to(n_onehot, 1, chunk)
+    d1p, _ = _pad_to(d1, 1, chunk)
+    d2p, _ = _pad_to(d2, 1, chunk)
+    d1e = d1p[..., None]
+    d2e = d2p[..., None]
+    vfe = vfp[..., None]
+
+    def body(j0):
+        d = _feats_dist_chunk(xf, sq, j0, chunk)
+        shift = (jnp.minimum(d, d1e) - d1e) * vfe
+        contrib = (jnp.clip(d, d1e, d2e) - d1e) * vfe
+        a = jnp.sum(shift, axis=-2)               # (C, chunk)
+        b = jnp.einsum("cij,cil->cjl", contrib, ohp)
+        vfj = jax.lax.dynamic_slice_in_dim(vfp, j0, chunk, axis=1)
+        return jnp.where(vfj > 0.0, a, _BIG), b
+
+    A, B = jax.lax.map(body, starts)
+    c = x.shape[0]
+    A = jnp.moveaxis(A, 0, 1).reshape(c, -1)[:, :m]
+    B = jnp.moveaxis(B, 0, 1).reshape(c, -1, n_onehot.shape[-1])[:, :m]
+    return A, B
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "block_m",
+                                             "block_k", "chunk",
+                                             "interpret"))
+def kmedoids_build_cost_from_feats(x, d_near, vf, *, use_kernel: bool = True,
+                                   block_m: int = 128, block_k: int = 128,
+                                   chunk: int = 256,
+                                   interpret: Optional[bool] = None):
+    """Distance-free BUILD add-cost: x (C, M, F), d_near/vf (C, M) -> (C, M).
+
+    Same reduction as :func:`kmedoids_build_cost` but the (C, M, M)
+    distance stack never exists — the Pallas kernel rebuilds each
+    distance tile from F-tiled cross terms (O(C·M·F) memory), and the
+    ``use_kernel=False`` fallback streams O(C·M·chunk) column slabs via
+    ``lax.map``.  Padded candidate columns (vf = 0) return +BIG so they
+    can never win the greedy argmin; padded rows contribute nothing.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    if not use_kernel:
+        return _build_cost_from_feats_jnp(x, d_near, vf, chunk=chunk)
+    m = x.shape[1]
+    bm, bk, fmul = _feat_blocks(m, x.shape[2], block_m, block_k, interpret)
+    xp, _ = _pad_to(x, 1, bm)
+    xp, _ = _pad_to(xp, 2, fmul)
+    dnp, _ = _pad_to(d_near, 1, bm)
+    vfp, _ = _pad_to(vf, 1, bm)
+    out = build_cost_from_feats_pallas(xp, dnp, vfp, block_m=bm, block_k=bk,
+                                       interpret=interpret)
+    return out[:, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "block_m",
+                                             "block_k", "chunk",
+                                             "interpret"))
+def kmedoids_delta_sweep_from_feats(x, d1, d2, vf, n_onehot, *,
+                                    use_kernel: bool = True,
+                                    block_m: int = 128, block_k: int = 128,
+                                    chunk: int = 256,
+                                    interpret: Optional[bool] = None):
+    """Distance-free FasterPAM Δ-sweep: x (C, M, F) in, (A, B) out.
+
+    Same (A, B) split as :func:`kmedoids_delta_sweep` with D rebuilt on
+    the fly per tile; A carries +BIG at padded candidates (vf = 0) so a
+    zero-padded feature row can never tie-win a swap over a valid point
+    (zero rows are mutually at distance 0 — the election bug this
+    masking closes).  ``use_kernel=False`` streams column slabs.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    if not use_kernel:
+        return _delta_sweep_from_feats_jnp(x, d1, d2, vf, n_onehot,
+                                           chunk=chunk)
+    m, k = x.shape[1], n_onehot.shape[-1]
+    bm, bk, fmul = _feat_blocks(m, x.shape[2], block_m, block_k, interpret)
+    k_pad = _pow2_block(k, 128, shrink=True) if interpret else -(-k // 128
+                                                                 ) * 128
+    xp, _ = _pad_to(x, 1, bm)
+    xp, _ = _pad_to(xp, 2, fmul)
+    d1p, _ = _pad_to(d1, 1, bm)
+    d2p, _ = _pad_to(d2, 1, bm)
+    vfp, _ = _pad_to(vf, 1, bm)
+    ohp, _ = _pad_to(n_onehot, 1, bm)
+    ohp, _ = _pad_to(ohp, 2, k_pad)
+    A, B = delta_sweep_from_feats_pallas(xp, d1p, d2p, vfp, ohp, block_m=bm,
+                                         block_k=bk, interpret=interpret)
     return A[:, :m], B[:, :m, :k]
 
 

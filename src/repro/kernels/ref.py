@@ -89,3 +89,53 @@ def kmedoids_delta_sweep_ref(D: jnp.ndarray, d1: jnp.ndarray,
     A = jnp.sum(shift, axis=-2)
     B = jnp.einsum("...ij,...il->...jl", contrib, n_onehot)
     return A, B
+
+
+# ---------------------------------------------------------------------------
+# distance-free oracles: these DO materialize D — that is the point.
+# The parity gate is "fused feature-tiled kernel == materialize-then-reduce",
+# exactly as PR 4 gated the Δ-sweep against the unfused stack.
+# ---------------------------------------------------------------------------
+
+_BIG = 1e30
+
+
+def _pairwise_from_feats(x: jnp.ndarray) -> jnp.ndarray:
+    """(..., M, F) -> (..., M, M) L2 stack with an exact-zero diagonal."""
+    xf = x.astype(jnp.float32)
+    sq = jnp.sum(xf * xf, axis=-1)
+    d2 = (sq[..., :, None] + sq[..., None, :]
+          - 2.0 * jnp.einsum("...if,...jf->...ij", xf, xf))
+    d = jnp.sqrt(jnp.maximum(d2, 0.0))
+    m = x.shape[-2]
+    eye = jnp.eye(m, dtype=bool)
+    return jnp.where(eye, 0.0, d)
+
+
+def kmedoids_build_cost_from_feats_ref(x: jnp.ndarray, d_near: jnp.ndarray,
+                                       vf: jnp.ndarray) -> jnp.ndarray:
+    """Materializing oracle for ``build_cost_from_feats_pallas``.
+
+    x (..., M, F); d_near/vf (..., M).  Builds the full distance stack,
+    runs the BUILD reduction, then masks padded candidate columns
+    (vf_j = 0) to +BIG — the same +inf election guard the fused kernel
+    applies in its epilogue so a zero-padded feature row can never
+    tie-win over a valid point.
+    """
+    D = _pairwise_from_feats(x)
+    cost = kmedoids_build_cost_ref(D, d_near, vf)
+    return jnp.where(vf > 0.0, cost, _BIG)
+
+
+def kmedoids_delta_sweep_from_feats_ref(x: jnp.ndarray, d1: jnp.ndarray,
+                                        d2: jnp.ndarray, vf: jnp.ndarray,
+                                        n_onehot: jnp.ndarray):
+    """Materializing oracle for ``delta_sweep_from_feats_pallas``.
+
+    Same (A, B) split as :func:`kmedoids_delta_sweep_ref`, computed from
+    the (..., M, F) feature stack by materializing D first, with
+    A[..., j] = +BIG for padded candidates (vf_j = 0).
+    """
+    D = _pairwise_from_feats(x)
+    A, B = kmedoids_delta_sweep_ref(D, d1, d2, vf, n_onehot)
+    return jnp.where(vf > 0.0, A, _BIG), B

@@ -1,0 +1,375 @@
+"""Distance-free selection tests (the ISSUE 10 tentpole contract).
+
+Covers the feature-tiled Pallas kernels against the materializing jnp
+oracles (the parity gate: fused tile-by-tile reductions == build-D-then-
+reduce), large-M parity in interpret mode (M ∈ {512, 2048} — sizes where
+the (C, M, M) stack is the roofline wall the kernels remove), the
+padded-lane election regression (zero feature rows are mutually at
+distance 0 and must never win a medoid election), the tile-size audit
+for tiny cohort groups, and the property that the distance-free and
+D-input solver paths select cost-tied medoids.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmedoids import (kmedoids_batched, kmedoids_batched_from_feats,
+                                 kmedoids_numpy)
+from repro.core.coreset import build_coreset_batched
+from repro.kernels import ops, ref
+
+
+def _masked_feats(rng, c, m, f, p_valid=0.8):
+    """Random (C, M, F) features with zero-padded invalid rows."""
+    x = rng.normal(size=(c, m, f)).astype(np.float32)
+    vf = (rng.random((c, m)) < p_valid).astype(np.float32)
+    # at least 2 valid rows per lane so instances stay solvable
+    vf[:, :2] = 1.0
+    x = x * vf[..., None]
+    return jnp.asarray(x), jnp.asarray(vf)
+
+
+# ---------------------------------------------------------------------------
+# kernels vs materializing oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c,m,f", [(3, 64, 16), (2, 21, 10), (1, 128, 60),
+                                   (4, 8, 3), (2, 40, 129)])
+def test_build_cost_from_feats_matches_ref(c, m, f):
+    rng = np.random.default_rng(c * 100 + m + f)
+    x, vf = _masked_feats(rng, c, m, f)
+    d_near = jnp.asarray(np.abs(rng.normal(size=(c, m))).astype(np.float32))
+    want = ref.kmedoids_build_cost_from_feats_ref(x, d_near, vf)
+    got_k = ops.kmedoids_build_cost_from_feats(x, d_near, vf,
+                                               use_kernel=True,
+                                               interpret=True)
+    got_j = ops.kmedoids_build_cost_from_feats(x, d_near, vf,
+                                               use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got_k), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_j), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+    # padded candidates masked to +BIG in-kernel, valid ones finite
+    big = np.asarray(got_k)[np.asarray(vf) == 0.0]
+    assert (big >= 1e29).all()
+    assert (np.asarray(got_k)[np.asarray(vf) > 0.0] < 1e29).all()
+
+
+@pytest.mark.parametrize("c,m,f,k", [(3, 64, 16, 5), (2, 21, 10, 1),
+                                     (1, 128, 60, 16), (4, 32, 7, 3)])
+def test_delta_sweep_from_feats_matches_ref(c, m, f, k):
+    rng = np.random.default_rng(c * 1000 + m + f + k)
+    x, vf = _masked_feats(rng, c, m, f)
+    d1 = np.abs(rng.normal(size=(c, m))).astype(np.float32)
+    d2 = d1 + np.abs(rng.normal(size=(c, m))).astype(np.float32)
+    n_idx = rng.integers(0, k, size=(c, m))
+    onehot = jnp.asarray(np.eye(k, dtype=np.float32)[n_idx])
+    args = (x, jnp.asarray(d1), jnp.asarray(d2), vf, onehot)
+    A_ref, B_ref = ref.kmedoids_delta_sweep_from_feats_ref(*args)
+    A_k, B_k = ops.kmedoids_delta_sweep_from_feats(*args, use_kernel=True,
+                                                   interpret=True)
+    A_j, B_j = ops.kmedoids_delta_sweep_from_feats(*args, use_kernel=False)
+    for got in (A_k, A_j):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(A_ref),
+                                   rtol=1e-5, atol=1e-4)
+    for got in (B_k, B_j):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(B_ref),
+                                   rtol=1e-5, atol=1e-4)
+    assert B_k.shape == (c, m, k)     # padded K lanes sliced off
+    # padded candidates carry +BIG removal gain — can never win a swap
+    assert (np.asarray(A_k)[np.asarray(vf) == 0.0] >= 1e29).all()
+
+
+@pytest.mark.parametrize("m,block_m", [(512, 256), (2048, 512)])
+def test_large_m_parity_interpret(m, block_m):
+    """M ∈ {512, 2048} parity of the distance-free kernels vs the
+    materializing oracles — the sizes the (C, M, M) stack path can't
+    reach.  Larger blocks keep the interpret-mode grid small; the
+    materializing oracle needs only one lane's (M, M) at f64-free f32."""
+    rng = np.random.default_rng(m)
+    c, f, k = 1, 32, 8
+    x, vf = _masked_feats(rng, c, m, f, p_valid=0.9)
+    d_near = jnp.asarray(np.abs(rng.normal(size=(c, m))).astype(np.float32))
+    want = ref.kmedoids_build_cost_from_feats_ref(x, d_near, vf)
+    got = ops.kmedoids_build_cost_from_feats(x, d_near, vf, use_kernel=True,
+                                             block_m=block_m,
+                                             interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-2)
+
+    d1 = np.abs(rng.normal(size=(c, m))).astype(np.float32)
+    d2 = d1 + np.abs(rng.normal(size=(c, m))).astype(np.float32)
+    onehot = jnp.asarray(np.eye(k, dtype=np.float32)[
+        rng.integers(0, k, size=(c, m))])
+    args = (x, jnp.asarray(d1), jnp.asarray(d2), vf, onehot)
+    A_ref, B_ref = ref.kmedoids_delta_sweep_from_feats_ref(*args)
+    A, B = ops.kmedoids_delta_sweep_from_feats(*args, use_kernel=True,
+                                               block_m=block_m,
+                                               interpret=True)
+    np.testing.assert_allclose(np.asarray(A), np.asarray(A_ref),
+                               rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(B), np.asarray(B_ref),
+                               rtol=1e-4, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# padded-lane election regression (the satellite-2 bug)
+# ---------------------------------------------------------------------------
+
+def test_padded_lane_never_wins_medoid_election():
+    """Zero-padded rows sit at the origin, mutually at distance 0.  Place
+    every valid point at norm r from the origin but 2r from each other:
+    without the in-kernel +BIG masking, the origin (a padded lane) is the
+    cheapest k = 1 medoid and wins the BUILD argmin.  The masking must
+    keep every selected medoid a valid row."""
+    r = 5.0
+    m, f = 32, 8
+    x = np.zeros((1, m, f), np.float32)
+    valid = np.zeros((1, m), bool)
+    # 6 valid points: ±r on three axes — pairwise distance r·√2 ≈ 7.07,
+    # distance to origin r = 5 < 7.07, so origin would win unmasked
+    for i, (axis, sign) in enumerate([(0, 1), (0, -1), (1, 1), (1, -1),
+                                      (2, 1), (2, -1)]):
+        x[0, i, axis] = sign * r
+        valid[0, i] = True
+    res = kmedoids_batched_from_feats(jnp.asarray(x), jnp.asarray(valid), 1,
+                                      max_sweeps=50)
+    med = int(np.asarray(res.medoids)[0, 0])
+    assert valid[0, med], f"padded lane {med} won the medoid election"
+    # and the mostly-padded grid shape: k near the valid count
+    res3 = kmedoids_batched_from_feats(jnp.asarray(x), jnp.asarray(valid), 4,
+                                       max_sweeps=50)
+    meds = np.asarray(res3.medoids)[0]
+    assert valid[0, meds].all()
+    assert int(np.asarray(res3.weights)[0].sum()) == 6
+
+
+# ---------------------------------------------------------------------------
+# solver parity: distance-free kernel vs jnp fallback vs numpy oracle
+# ---------------------------------------------------------------------------
+
+def _feat_instance(rng, kind, m_pad, k, f=5):
+    """A masked/padded *feature* instance mirroring the oracle grid of
+    ``test_kmedoids_fused`` (plain / clusters / duplicates / mostly
+    padded / all valid), with zero-padded rows as the engines produce."""
+    if kind == "all_valid":
+        m = m_pad
+    elif kind == "mostly_padded":
+        m = int(rng.integers(max(k, 2), max(k + 1, m_pad // 5)))
+    else:
+        m = int(rng.integers(max(k, 4), m_pad + 1))
+    x = rng.normal(size=(m, f)).astype(np.float32)
+    if kind == "clusters" and m >= 6:
+        x[: m // 3] += 4.0
+        x[m // 3: 2 * m // 3] -= 4.0
+    if kind == "duplicates" and m >= 2 * k:
+        x[1::2] = x[::2][: len(x[1::2])]
+    xp = np.zeros((m_pad, f), np.float32)
+    xp[:m] = x
+    valid = np.arange(m_pad) < m
+    return xp, valid, x
+
+
+KINDS = ("plain", "clusters", "duplicates", "mostly_padded", "all_valid")
+
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_from_feats_kernel_and_fallback_bit_identical(k):
+    """The distance-free solver picks **bit-identical** medoids whether
+    its reductions run through the Pallas kernels (interpret) or the
+    chunked jnp fallback — same distances, different execution — across
+    the masked/padded instance grid, and its objective matches the f64
+    host oracle on the true distances."""
+    m_pad = 32
+    rng = np.random.default_rng(2000 + k)
+    xs, valids, trues = [], [], []
+    for i in range(15):
+        xp, valid, x = _feat_instance(rng, KINDS[i % len(KINDS)], m_pad, k)
+        xs.append(xp)
+        valids.append(valid)
+        trues.append(x)
+    feats = jnp.asarray(np.stack(xs))
+    valid = jnp.asarray(np.stack(valids))
+    res_k = kmedoids_batched_from_feats(feats, valid, k, max_sweeps=100,
+                                        use_kernel=True)
+    res_j = kmedoids_batched_from_feats(feats, valid, k, max_sweeps=100,
+                                        use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(res_k.medoids),
+                                  np.asarray(res_j.medoids))
+    np.testing.assert_array_equal(np.asarray(res_k.weights),
+                                  np.asarray(res_j.weights))
+    for c, x in enumerate(trues):
+        m = x.shape[0]
+        meds = np.asarray(res_k.medoids[c])
+        assert (meds < m).all()          # never a padded lane
+        sq = (x.astype(np.float64) ** 2).sum(-1)
+        D64 = np.sqrt(np.maximum(
+            sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0))
+        np.fill_diagonal(D64, 0.0)
+        want = kmedoids_numpy(D64, k, max_sweeps=100)
+        got_obj = D64[:, meds].min(axis=1).sum()
+        np.testing.assert_allclose(got_obj, float(want.objective),
+                                   rtol=1e-4,
+                                   err_msg=f"lane {c} "
+                                           f"kind={KINDS[c % len(KINDS)]}")
+        assert int(np.asarray(res_k.weights[c]).sum()) == m
+        assert (np.asarray(res_k.assignment[c])[m:] == -1).all()
+
+
+def _assert_cost_tied(feats, valid, k):
+    """Distance-free and D-input paths select cost-tied medoid sets.
+    ``materialize_below=0`` forces streaming even at these small M (the
+    adaptive default would materialize below 256 and make this vacuous)."""
+    df = build_coreset_batched(feats, valid, k, distance_free=True,
+                               materialize_below=0)
+    dd = build_coreset_batched(feats, valid, k, distance_free=False)
+    x64 = np.asarray(feats, np.float64)
+    v = np.asarray(valid)
+    for c in range(x64.shape[0]):
+        x = x64[c][v[c]]
+        sq = (x * x).sum(-1)
+        D64 = np.sqrt(np.maximum(
+            sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0))
+        np.fill_diagonal(D64, 0.0)
+        for cs in (df, dd):
+            assert v[c][np.asarray(cs.indices[c])].all()
+        # medoid indices address the padded stack; D64 the compacted rows
+        pos = np.cumsum(v[c]) - 1
+
+        def obj(meds):
+            return D64[:, pos[np.asarray(meds)]].min(axis=1).sum()
+
+        np.testing.assert_allclose(obj(df.indices[c]), obj(dd.indices[c]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_distance_free_matches_d_input_seeded_sweep():
+    """Seeded fallback for the hypothesis property below (hypothesis is
+    an optional dependency): over randomized masked instances, the
+    distance-free and D-input solver paths select identical medoids up
+    to tied-optima classes — scored as equal objectives on the f64 true
+    distances, with every medoid a valid row."""
+    rng = np.random.default_rng(0)
+    for trial in range(8):
+        c = int(rng.integers(1, 4))
+        m = int(rng.integers(8, 48))
+        f = int(rng.integers(2, 20))
+        k = int(rng.integers(1, 6))
+        x, vf = _masked_feats(rng, c, m, f)
+        valid = np.asarray(vf) > 0
+        k = min(k, int(valid.sum(1).min()))
+        _assert_cost_tied(x, jnp.asarray(valid), k)
+
+
+def test_distance_free_matches_d_input_property():
+    """Hypothesis form of the tied-optima property (auto-skip when
+    hypothesis is absent, like the fleet/MoE property suites)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 3),
+           st.integers(6, 40), st.integers(2, 16), st.integers(1, 5))
+    def prop(seed, c, m, f, k):
+        rng = np.random.default_rng(seed)
+        x, vf = _masked_feats(rng, c, m, f)
+        valid = np.asarray(vf) > 0
+        _assert_cost_tied(x, jnp.asarray(valid),
+                          min(k, int(valid.sum(1).min())))
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# adaptive materialization cutover
+# ---------------------------------------------------------------------------
+
+def test_materialize_below_cutover_small_m_bit_identical():
+    """Below the adaptive cutover, ``distance_free=True`` materializes
+    anyway — streaming's O(k·C·M²·F) recompute FLOPs cost more than the
+    few-MB (C, M, M) stack saves — so small-M selection is bit-identical
+    to the D-input path (same program, not just cost-tied)."""
+    rng = np.random.default_rng(7)
+    x, vf = _masked_feats(rng, 3, 40, 8)
+    valid = jnp.asarray(np.asarray(vf) > 0)
+    df = build_coreset_batched(x, valid, 5, distance_free=True)
+    dd = build_coreset_batched(x, valid, 5, distance_free=False)
+    np.testing.assert_array_equal(np.asarray(df.indices),
+                                  np.asarray(dd.indices))
+    np.testing.assert_array_equal(np.asarray(df.weights),
+                                  np.asarray(dd.weights))
+    # while forcing the cutover to 0 streams (different reduction order:
+    # objectives tie, indices may settle on either tied optimum)
+    st = build_coreset_batched(x, valid, 5, distance_free=True,
+                               materialize_below=0)
+    np.testing.assert_allclose(np.asarray(st.objective),
+                               np.asarray(dd.objective), rtol=1e-5)
+
+
+def test_fleet_engine_streams_selection_below_cutover():
+    """``FleetConfig.materialize_below=0`` pushes the streaming solver
+    through the fused group selection program: the engine's 1-dispatch
+    contract holds and the selected coresets are cost-tied with the
+    default (adaptively materializing) engine's."""
+    from conftest import fixed_size_clients
+    from repro.fed.fleet.batched import (FleetConfig, FleetEngine,
+                                         make_cohort_groups)
+
+    model, data = fixed_size_clients("mlp", n_clients=4, m=40, seed=2)
+    cfg = FleetConfig(epochs=2, batch_size=8, seed=0)
+    cids = list(range(len(data)))
+    groups = make_cohort_groups(data, cids, {c: 20 for c in cids}, cfg, 0)
+    g = groups[0]
+    params = model.init(jax.random.PRNGKey(0))
+
+    eng_mat = FleetEngine(model, cfg)
+    eng_str = FleetEngine(model, dataclasses.replace(cfg,
+                                                     materialize_below=0))
+    cs_mat, n_mat = eng_mat.select_group_coresets(params, g, fused=True)
+    cs_str, n_str = eng_str.select_group_coresets(params, g, fused=True)
+    assert (n_mat, n_str) == (1, 1)
+    np.testing.assert_allclose(np.asarray(cs_str.objective),
+                               np.asarray(cs_mat.objective), rtol=1e-5)
+    for c in range(g.n_clients):
+        m = int(g.m[c])
+        for cs in (cs_mat, cs_str):
+            assert (np.asarray(cs.indices[c]) < m).all()
+            assert int(np.asarray(cs.weights[c]).sum()) == m
+
+
+# ---------------------------------------------------------------------------
+# tile-size audit (the satellite-3 double-padding bug)
+# ---------------------------------------------------------------------------
+
+def test_feat_blocks_no_double_padding_for_tiny_groups():
+    """Interpret mode must size BOTH tiles to the problem: a tiny cohort
+    group (M = 32, F = 16) gets (32, 16) tiles and pads F only to 16 —
+    not the 64→128-style waste twice (once in M, once in F) the
+    always-pad-F-to-128 stack wrappers paid."""
+    bm, bk, fmul = ops._feat_blocks(32, 16, 128, 128, interpret=True)
+    assert (bm, bk, fmul) == (32, 16, 16)
+    bm, bk, fmul = ops._feat_blocks(64, 60, 128, 128, interpret=True)
+    assert (bm, bk, fmul) == (64, 64, 64)
+    # floors: sub-8 dims keep the (8, ·) minimum f32 tile shape
+    bm, bk, fmul = ops._feat_blocks(5, 3, 128, 128, interpret=True)
+    assert (bm, bk, fmul) == (8, 8, 8)
+    # compiled TPU path keeps lane-aligned 128-multiples on F
+    bm, bk, fmul = ops._feat_blocks(32, 16, 128, 128, interpret=False)
+    assert fmul == 128 and bk == 128 and bm == 128
+    # large F: block_k divides the 128-padded F
+    bm, bk, fmul = ops._feat_blocks(256, 200, 128, 128, interpret=False)
+    assert fmul == 128 and (-(-200 // 128) * 128) % bk == 0
+
+    # and the wrappers accept the shrunk tiles end to end (M=8, F=3)
+    rng = np.random.default_rng(3)
+    x, vf = _masked_feats(rng, 2, 8, 3)
+    dn = jnp.asarray(np.abs(rng.normal(size=(2, 8))).astype(np.float32))
+    got = ops.kmedoids_build_cost_from_feats(x, dn, vf, use_kernel=True,
+                                             interpret=True)
+    want = ref.kmedoids_build_cost_from_feats_ref(x, dn, vf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

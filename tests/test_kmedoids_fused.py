@@ -227,8 +227,13 @@ def test_fused_group_program_is_single_dispatch():
 
 
 def test_selection_fused_matches_prefusion_chain_dispatch_counts():
-    """select_group_coresets: identical medoids from the 1-dispatch fused
-    program and the 3-dispatch pre-fusion baseline chain."""
+    """select_group_coresets: the 1-dispatch fused program (distance-free)
+    and the 3-dispatch pre-fusion baseline chain (materializing) select
+    equivalent medoids — equal up to tied-optima classes, scored on one
+    shared float64 distance matrix — and the dispatch counts don't
+    regress.  (Exact index equality is no longer guaranteed: the two
+    paths accumulate distances in different orders, and equal-cost swap
+    ties may settle on either optimum.)"""
     model, data = _tiny_fleet(seed=3)
     cfg = FleetConfig(epochs=2, batch_size=8, seed=0)
     engine = FleetEngine(model, cfg)
@@ -240,10 +245,30 @@ def test_selection_fused_matches_prefusion_chain_dispatch_counts():
     fused, n_fused = engine.select_group_coresets(params, g, fused=True)
     chain, n_chain = engine.select_group_coresets(params, g, fused=False)
     assert (n_fused, n_chain) == (1, 3)
-    np.testing.assert_array_equal(np.asarray(fused.indices),
-                                  np.asarray(chain.indices))
-    np.testing.assert_array_equal(np.asarray(fused.weights),
-                                  np.asarray(chain.weights))
+    np.testing.assert_allclose(np.asarray(fused.objective),
+                               np.asarray(chain.objective), rtol=1e-6)
+    feats = np.asarray(engine._feats(params,
+                                     jax.tree.map(jnp.asarray, g.data)),
+                       np.float64)
+    for c in range(g.n_clients):
+        m = int(g.m[c])
+        x = feats[c, :m]
+        sq = (x * x).sum(-1)
+        D64 = np.sqrt(np.maximum(
+            sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0))
+        np.fill_diagonal(D64, 0.0)
+
+        def obj(meds):
+            assert (np.asarray(meds) < m).all()   # never a padded lane
+            return D64[:, np.asarray(meds)].min(axis=1).sum()
+
+        fo, co = obj(fused.indices[c]), obj(chain.indices[c])
+        np.testing.assert_allclose(fo, co, rtol=1e-5,
+                                   err_msg=f"lane {c}: fused and chain "
+                                           f"medoids are not cost-tied")
+        # both weight vectors partition the same m real samples
+        assert int(np.asarray(fused.weights[c]).sum()) == m
+        assert int(np.asarray(chain.weights[c]).sum()) == m
 
 
 def test_round_dispatch_count_is_one_per_group():
